@@ -1,0 +1,2 @@
+"""Shim: the HLO static analyzer lives in repro.launch.hlo_analysis."""
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: F401

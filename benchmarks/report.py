@@ -1,0 +1,120 @@
+"""Render the §Dry-run and §Roofline markdown tables from the dry-run
+artifacts (inserted into EXPERIMENTS.md between the AUTOGEN markers).
+
+    PYTHONPATH=src python -m benchmarks.report [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+
+from benchmarks import roofline as R
+
+
+def dryrun_table(out_dir="results/dryrun") -> str:
+    lines = ["| arch | shape | mesh | status | compile(s) | temp GiB/dev |"
+             " HLO flops/dev | HLO bytes/dev | coll GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(path))
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['status']}: "
+                         f"{r.get('reason', r.get('error', ''))[:60]} |"
+                         " | | | | |")
+            continue
+        a = r["analysis"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f} | "
+            f"{r['memory']['temp_bytes'] / 2**30:.1f} | "
+            f"{a['flops']:.2e} | {a['memory_bytes']:.2e} | "
+            f"{a['collectives'].get('total_bytes', 0) / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="pod") -> str:
+    rows = R.load_all()
+    lines = ["| arch | shape | compute(s) | memory(s) | collective(s) |"
+             " dominant | MODEL_FLOPS | useful | roofline |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{100 * r['roofline_fraction']:.1f}% |")
+    return "\n".join(lines)
+
+
+def variants_table(out_dir="results/dryrun") -> str:
+    lines = ["| cell | variant | baseline-dominant term before→after | Δ | step bound |",
+             "|---|---|---|---|---|"]
+    base = {}
+    var = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(path))
+        if r["status"] != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        row = R.analyze_record(r)
+        if row is None:
+            continue
+        if r.get("variant", "baseline") == "baseline":
+            base[key] = row
+        else:
+            var.append((key, r["variant"], row))
+    for key, vname, row in var:
+        b = base.get(key)
+        if not b:
+            continue
+        dom = b["dominant"]
+        tb = b[f"t_{dom}_s"]
+        ta = row[f"t_{dom}_s"]
+        new_bound = max(row["t_compute_s"], row["t_memory_s"],
+                        row["t_collective_s"])
+        old_bound = max(b["t_compute_s"], b["t_memory_s"],
+                        b["t_collective_s"])
+        lines.append(f"| {key[0]}/{key[1]} | {vname} | "
+                     f"{dom}: {tb:.3e}→{ta:.3e} | "
+                     f"{100 * (1 - ta / max(tb, 1e-30)):+.1f}% | "
+                     f"bound {old_bound:.3e}→{new_bound:.3e} "
+                     f"({100 * (1 - new_bound / max(old_bound, 1e-30)):+.1f}%) |")
+    return "\n".join(lines)
+
+
+def update_experiments(path="EXPERIMENTS.md"):
+    text = open(path).read()
+    for marker, content in [
+            ("DRYRUN", dryrun_table()),
+            ("ROOFLINE_POD", roofline_table("pod")),
+            ("ROOFLINE_MULTIPOD", roofline_table("multipod")),
+            ("VARIANTS", variants_table())]:
+        begin, end = f"<!-- AUTOGEN:{marker} -->", f"<!-- /AUTOGEN:{marker} -->"
+        if begin in text and end in text:
+            text = re.sub(
+                re.escape(begin) + ".*?" + re.escape(end),
+                begin + "\n" + content + "\n" + end,
+                text, flags=re.S)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true")
+    args = ap.parse_args()
+    if args.update:
+        update_experiments()
+    else:
+        print(dryrun_table())
+        print()
+        print(roofline_table())

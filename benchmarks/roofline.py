@@ -1,0 +1,148 @@
+"""Roofline analysis over the dry-run artifacts (assignment §Roofline).
+
+Per (arch, shape, mesh) cell, from results/dryrun/*.json:
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-
+compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+NOTE on units: XLA's cost_analysis on the SPMD-partitioned module reports
+per-device FLOPs/bytes; collective bytes from the HLO are per-device
+payload sums.  We therefore use per-device numerators against per-chip
+peaks (equivalent to the assignment's global/chips normalization).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (v5e: 4 links usable; we use
+                             # one-link worst case per the assignment)
+
+
+def param_count(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count from the config."""
+    d, l, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    n = v * d                                     # embeddings
+    if not cfg.tie_embeddings:
+        n += v * d
+    attn = d * h * hd + 2 * d * kh * hd + h * hd * d
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    if cfg.family in ("dense", "vlm"):
+        n += l * (attn + mlp_params(cfg.d_ff))
+    elif cfg.family == "moe":
+        e = cfg.top_k if active_only else cfg.num_experts
+        n += l * (attn + e * 3 * d * cfg.moe_d_ff + d * cfg.num_experts)
+    elif cfg.family == "ssm":                     # rwkv6
+        n += l * (4 * d * d + d * d + 2 * d * cfg.d_ff)   # time+channel mix
+    elif cfg.family == "hybrid":                  # zamba2
+        di = cfg.d_inner
+        per = d * (2 * di + 2 * cfg.ssm_state + cfg.ssm_heads) + di * d
+        n += l * per
+        n += attn + mlp_params(cfg.d_ff)          # one shared block
+    elif cfg.family == "encdec":
+        n += (l + cfg.enc_layers) * (attn + mlp_params(cfg.d_ff))
+        n += l * attn                             # cross attention
+    return float(n)
+
+
+def model_flops(cfg, shape: dict) -> float:
+    """6*N*D (training) / 2*N*D (inference fwd) useful-compute reference."""
+    n = param_count(cfg, active_only=(cfg.family == "moe"))
+    n_no_embed = n - cfg.vocab_size * cfg.d_model  # lm-head counted once
+    tokens = shape["global_batch"] * (
+        1 if shape["kind"] == "decode" else shape["seq_len"])
+    mult = 6.0 if shape["kind"] == "train" else 2.0
+    return mult * n_no_embed * tokens
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    if "analysis" in rec:   # loop-aware static HLO analysis (preferred —
+        # XLA cost_analysis counts while bodies once, see hlo_analysis.py)
+        flops_dev = rec["analysis"]["flops"]
+        bytes_dev = rec["analysis"]["memory_bytes"]
+        coll_dev = rec["analysis"]["collectives"].get("total_bytes", 0)
+    else:
+        flops_dev = rec["cost"]["flops"]
+        bytes_dev = rec["cost"]["bytes_accessed"]
+        coll_dev = rec["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    flops_global = flops_dev * rec["devices"]
+    useful = mf / flops_global if flops_global else 0.0
+    # roofline fraction: useful work at peak / dominant-term bound
+    t_ideal = (mf / rec["devices"]) / PEAK_FLOPS
+    t_bound = max(terms.values())
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "devices")},
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": flops_global,
+        "useful_ratio": useful,
+        "roofline_fraction": (t_ideal / t_bound) if t_bound else 0.0,
+        "temp_gib_dev": rec["memory"]["temp_bytes"] / 2 ** 30,
+        "arg_gib_dev": rec["memory"]["argument_bytes"] / 2 ** 30,
+        "coll_detail": {k: v for k, v in rec["collectives"].items()
+                        if isinstance(v, dict) and v["count"]},
+    }
+
+
+def load_all(out_dir: str = "results/dryrun",
+             variants: bool = False) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if (rec.get("variant", "baseline") != "baseline") != variants:
+            continue
+        row = analyze_record(rec)
+        if row:
+            row["variant"] = rec.get("variant", "baseline")
+            rows.append(row)
+    return rows
+
+
+def print_table(rows: list[dict], mesh: str = "pod"):
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>5s} {'useful':>7s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+              f"{r['t_collective_s']:9.2e} {r['dominant'][:5]:>5s} "
+              f"{r['useful_ratio']:7.3f} "
+              f"{100 * r['roofline_fraction']:6.1f}%")
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print("== single-pod (16x16) ==")
+    print_table(rows, "pod")
+    print("\n== multi-pod (2x16x16) ==")
+    print_table(rows, "multipod")

@@ -1,0 +1,42 @@
+"""Quickstart: the paper's API in 30 lines.
+
+Define an irregular computation as a code seed (paper Alg. 5), let
+Intelligent-Unroll analyze the immutable access arrays, and execute the
+specialized plan.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.apps import SpMV
+from repro.core.seed import spmv_seed
+from repro.sparse import generators as G
+
+# a FEM-like banded matrix (regular-ish pattern hidden in COO)
+m = G.banded(n=4096, band=27)
+print(f"matrix: {m.name} {m.shape} nnz={m.nnz}")
+
+# one-time analysis: feature table -> pattern classes -> execution plan
+sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                   np.asarray(m.vals), m.shape, lane_width=128)
+st = sp.plan.stats
+print(f"pattern classes: {st.num_classes}, "
+      f"gather->vload replaced on {100 * st.replaced_gather_frac:.1f}% "
+      f"of blocks, metadata dedup {100 * st.dedup_ratio:.1f}%")
+print(f"L/S histogram: { {k: round(v, 3) for k, v in sorted(st.ls_hist.items())} }")
+print(f"RMW writes after merge: {st.heads_total} (vs {st.nnz} scatter-adds)")
+
+# repeated execution over mutable data (x) amortizes the analysis
+x = jnp.asarray(np.random.default_rng(0).standard_normal(m.shape[1]),
+                jnp.float32)
+y = sp.matvec(x)
+
+# verify against the direct scatter oracle
+y_ref = np.zeros(m.shape[0], np.float64)
+np.add.at(y_ref, np.asarray(m.rows),
+          np.asarray(m.vals, np.float64) * np.asarray(x)[np.asarray(m.cols)])
+err = np.abs(np.asarray(y) - y_ref).max() / np.abs(y_ref).max()
+print(f"max rel err vs oracle: {err:.2e}")
+assert err < 1e-5
+print("OK — seed:", spmv_seed().name)

@@ -1,0 +1,11 @@
+"""Batched serving example (prefill + KV-cache decode across families).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b
+runs the reduced config of the chosen architecture: prefill a batch of
+prompts, then stream tokens with the family-specific cache (ring-buffer
+sliding-window caches for gemma3/danube, SSM states for rwkv/zamba).
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

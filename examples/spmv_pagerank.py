@@ -1,0 +1,55 @@
+"""Paper applications end-to-end: SpMV power iteration + PageRank.
+
+Reproduces the paper's evaluation flow (§7): build plans once per dataset,
+run the apps, report the opportunity analysis (Table 6 shape) and timings.
+
+    PYTHONPATH=src python examples/spmv_pagerank.py [--pallas]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.apps import PageRank, SpMV, pagerank_reference
+from repro.sparse import generators as G
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--pallas", action="store_true",
+                help="use the Pallas kernels (interpret mode on CPU)")
+args = ap.parse_args()
+backend = "pallas" if args.pallas else "jax"
+
+print("== SpMV across dataset families ==")
+for m in G.suite("small"):
+    sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=128,
+                       backend=backend)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(m.shape[1]),
+                    jnp.float32)
+    y = jax.block_until_ready(sp.matvec(x))     # compile
+    t0 = time.perf_counter()
+    for _ in range(10):
+        y = sp.matvec(x)
+    jax.block_until_ready(y)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    st = sp.plan.stats
+    print(f"  {m.name:10s} nnz={m.nnz:7d} classes={st.num_classes:3d} "
+          f"replaced={100 * st.replaced_gather_frac:5.1f}% "
+          f"dedup={100 * st.dedup_ratio:5.1f}% {us:9.1f} us/matvec")
+
+print("\n== PageRank (edge-push, 20 iterations) ==")
+src, dst, n = G.graph_edges("powerlaw", 8192, 16)
+pr = PageRank.from_edges(src, dst, n, backend=backend)
+t0 = time.perf_counter()
+rank = jax.block_until_ready(pr.run(iters=20))
+dt = time.perf_counter() - t0
+ref = pagerank_reference(src, dst, n, iters=20)
+err = np.abs(np.asarray(rank) - ref).max() / ref.max()
+st = pr.plan.stats
+print(f"  n={n} edges={len(src)} classes={st.num_classes} "
+      f"heads/nnz={st.heads_total / st.nnz:.2f}")
+print(f"  20 sweeps in {dt:.2f}s, rel err vs numpy oracle {err:.2e}")
+top = np.argsort(-np.asarray(rank))[:5]
+print(f"  top-5 nodes: {top.tolist()}")

@@ -1,0 +1,137 @@
+"""Sharded pytree checkpointing: msgpack + zstd, atomic commit, keep-k GC,
+async writes, and **elastic restore** (any checkpoint onto any mesh —
+leaves are saved unsharded with their logical-axes metadata and re-laid-out
+at load via the target mesh's sharding rules).
+
+Layout:
+  <dir>/step_000123.tmp/   (staging)
+  <dir>/step_000123/
+      leaves.msgpack.zst   {path: {shape, dtype, data}}
+      MANIFEST.json        {step, config, axes, format_version}  <- last
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+FORMAT_VERSION = 1
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: dict, skeleton):
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(tree[k], f"{prefix}/{k}") for k in tree}
+        if isinstance(tree, (list, tuple)):
+            t = [build(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(t)
+        return flat[prefix]
+    return build(skeleton)
+
+
+def save(ckpt_dir: str, step: int, tree, axes_tree=None, extra: dict | None
+         = None, keep: int = 3, block: bool = True):
+    """Atomic checkpoint write.  ``block=False`` runs in a daemon thread
+    (async staging) — the arrays are fetched to host first so training can
+    donate/overwrite device buffers immediately."""
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+
+    def _write():
+        tag = f"step_{step:08d}"
+        tmp = os.path.join(ckpt_dir, tag + ".tmp")
+        final = os.path.join(ckpt_dir, tag)
+        os.makedirs(tmp, exist_ok=True)
+        payload = {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "data": v.tobytes()} for k, v in host.items()}
+        raw = msgpack.packb(payload, use_bin_type=True)
+        with open(os.path.join(tmp, "leaves.msgpack.zst"), "wb") as f:
+            f.write(zstd.ZstdCompressor(level=3).compress(raw))
+        manifest = {
+            "step": step, "format_version": FORMAT_VERSION,
+            "axes": jax.tree.map(
+                lambda a: list(a), axes_tree,
+                is_leaf=lambda x: isinstance(x, tuple)) if axes_tree else None,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)             # atomic commit
+        _gc(ckpt_dir, keep)
+
+    if block:
+        _write()
+        return None
+    th = threading.Thread(target=_write, daemon=True)
+    th.start()
+    return th
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "MANIFEST.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, skeleton, shardings=None):
+    """Restore into ``skeleton``'s structure.  ``shardings`` (optional
+    pytree of NamedSharding) re-lays-out every leaf for the *current* mesh —
+    elastic restore across device-count changes."""
+    tag = f"step_{step:08d}"
+    with open(os.path.join(ckpt_dir, tag, "leaves.msgpack.zst"), "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {}
+    for k, rec in payload.items():
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"])
+        flat[k] = arr
+    tree = _unflatten(flat, skeleton)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+def manifest(ckpt_dir: str, step: int) -> dict:
+    tag = f"step_{step:08d}"
+    with open(os.path.join(ckpt_dir, tag, "MANIFEST.json")) as f:
+        return json.load(f)

@@ -1,0 +1,270 @@
+"""Plan execution engine — runs a :class:`BlockPlan` on a chosen backend.
+
+Backends:
+  * ``jax``    — pure-XLA execution of the specialized plan (class-sorted
+    blocks, tile-granular window loads, log-step segmented reduce).  This is
+    the portable path and the one used inside the distributed stack.
+  * ``pallas`` — the Pallas TPU kernels in ``repro.kernels`` (one
+    specialization per pattern class); validated with ``interpret=True`` on
+    CPU, targeted at TPU VMEM/MXU.
+  * ``reference`` — direct scatter oracle (un-optimized seed semantics).
+  * ``baseline_gather`` — what a conservative compiler emits: native gather
+    + full scatter-add, no pattern specialization (the paper's icc baseline
+    analogue; used by the benchmarks).
+
+The executor factory performs the Data Transfer step once (physical nnz
+reorder into class-sorted, in-block-sorted order) and returns a jitted
+callable over the *mutable* inputs only — mirroring the paper's split of
+immutable access arrays (analyzed, reordered) vs mutable data (touched every
+call).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import feature_table as ft
+from repro.core.plan import GATHER_FALLBACK, BlockPlan, PatternClass
+from repro.core.seed import CodeSeed, reference_execute
+
+_SEG_PAD = -(2 ** 30)
+
+
+def _padded_view_len(data_len: int, n: int) -> int:
+    return max(1, -(-data_len // n)) * n
+
+
+def reorder_elementwise(plan: BlockPlan, arr: np.ndarray | jnp.ndarray,
+                        identity: float = 0.0) -> jnp.ndarray:
+    """Data Transfer: physically reorder an nnz-aligned immutable array into
+    exec order (class-sorted blocks, in-block write-sorted), padding with the
+    reduce identity. Returns (B, N)."""
+    arr = jnp.asarray(arr)
+    padded = jnp.concatenate(
+        [arr, jnp.full((1,) + arr.shape[1:], identity, arr.dtype)])
+    flat = padded[jnp.asarray(np.minimum(plan.flat_perm, plan.nnz))]
+    return flat.reshape(plan.num_blocks, plan.lane_width)
+
+
+def _pad_gathered(plan: BlockPlan, g: jnp.ndarray) -> jnp.ndarray:
+    """Pad a gathered dense array to a whole number of lane tiles and view it
+    as (num_windows, N) — the tile-granular unit of the vload path."""
+    n = plan.lane_width
+    total = _padded_view_len(plan.data_len, n)
+    pad = total - g.shape[0]
+    gp = jnp.pad(g, (0, pad)) if pad else g
+    return gp.reshape(total // n, n)
+
+
+def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
+                     reduce: str, identity: float) -> jnp.ndarray:
+    """§5: log-step masked shift-reduce.  ``op_flag`` static steps; runs are
+    consecutive (the Data Transfer sort guarantees it); after the loop each
+    segment's *head lane* holds the full segment reduction."""
+    from repro.core.seed import REDUCE_OPS
+    op, _ = REDUCE_OPS[reduce]
+    bc, n = term.shape
+    if op_flag == ft.FULL_REDUCE:
+        # paper: single-segment block -> architecture-native reduction
+        if reduce == "add":
+            total = jnp.sum(term, axis=1)
+        elif reduce == "mul":
+            total = jnp.prod(term, axis=1)
+        elif reduce == "max":
+            total = jnp.max(term, axis=1)
+        else:
+            total = jnp.min(term, axis=1)
+        return term.at[:, 0].set(total)
+    for k in range(op_flag):
+        d = 1 << k
+        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+                          constant_values=identity)
+        seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
+                            constant_values=_SEG_PAD)
+        term = jnp.where(seg == seg_shift, op(term, shifted), term)
+    return term
+
+
+def _gather_class_values(plan: BlockPlan, c: PatternClass, s: slice,
+                         meta: Mapping[str, jnp.ndarray],
+                         mutable: Mapping[str, jnp.ndarray]) -> dict:
+    """§6: produce per-lane gathered values for one pattern class."""
+    seed = plan.seed
+    vals = {}
+    if seed.gather_index is None:
+        return vals
+    n = plan.lane_width
+    if c.ls_flag == GATHER_FALLBACK:
+        gi = meta["gather_idx"][s]
+        for g in seed.gathered:
+            vals[g] = mutable[g][gi]
+        return vals
+    win = meta["window_ids"][s][:, :c.ls_flag]            # (Bc, M)
+    for g in seed.gathered:
+        gv = _pad_gathered(plan, mutable[g])[win]          # (Bc, M, N) tile loads
+        if c.stream:
+            vals[g] = gv[:, 0]                             # pure vload
+        else:
+            flat = gv.reshape(gv.shape[0], c.ls_flag * n)
+            lane = (meta["lane_slot"][s].astype(jnp.int32) * n
+                    + meta["lane_offset"][s].astype(jnp.int32))
+            vals[g] = jnp.take_along_axis(flat, lane, axis=1)
+    return vals
+
+
+def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
+                 fuse_classes: bool = False) -> jnp.ndarray:
+    """Run every pattern class; return the (B, N) post-reduce lane matrix.
+
+    ``fuse_classes=True`` merges all vload classes into ONE launch padded to
+    the max window count, with a full log2(N) reduce ladder.  Legality:
+    extra shift-reduce steps are no-ops (the segment-equality mask blocks
+    any combine across run boundaries, and within a run the covered ranges
+    of step k are disjoint), and window slots beyond a block's ls are never
+    selected by its lane permutation.  This trades the paper's per-class
+    specialization for fewer kernel launches — a win where dispatch
+    overhead dominates (XLA-CPU), a loss where the specialized instruction
+    count matters (the paper's setting); both recorded in EXPERIMENTS §Perf.
+    """
+    import math
+    seed = plan.seed
+    parts = []
+    classes = plan.classes
+    if fuse_classes:
+        vload = [c for c in classes if c.ls_flag != GATHER_FALLBACK]
+        rest = [c for c in classes if c.ls_flag == GATHER_FALLBACK]
+        classes = list(rest)
+        if vload:
+            classes.append(PatternClass(
+                ls_flag=max(c.ls_flag for c in vload),
+                op_flag=int(math.ceil(math.log2(plan.lane_width))),
+                stream=all(c.stream for c in vload),
+                start=min(c.start for c in vload),
+                stop=max(c.stop for c in vload)))
+    for c in classes:
+        s = plan.class_slice(c)
+        vals = _gather_class_values(plan, c, s, meta, mutable)
+        for e in seed.elementwise:
+            vals[e] = elem_exec[e][s]
+        term = seed.combine(vals)
+        term = segmented_reduce(term, meta["seg_ids"][s], c.op_flag,
+                                seed.reduce, seed.reduce_identity)
+        parts.append(term)
+    return jnp.concatenate(parts, axis=0)
+
+
+def _stage_b(plan: BlockPlan, meta, lanes: jnp.ndarray,
+             out_init: jnp.ndarray) -> jnp.ndarray:
+    """Merged write-back (Fig. 4): one RMW per distinct (block, row) head."""
+    hv = lanes.reshape(-1)[meta["head_pos"]]
+    rows = meta["head_rows"]
+    seed = plan.seed
+    if seed.reduce == "add":
+        return out_init.at[rows].add(hv)
+    if seed.reduce == "mul":
+        return out_init.at[rows].multiply(hv)
+    if seed.reduce == "max":
+        return out_init.at[rows].max(hv)
+    return out_init.at[rows].min(hv)
+
+
+def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
+                  backend: str = "jax", interpret: bool | None = None,
+                  fuse_classes: bool = False):
+    """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
+
+    ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
+    arrays in original order; they are reordered once here (Data Transfer)
+    and closed over as device constants.
+    """
+    seed = plan.seed
+    elem_exec = {e: reorder_elementwise(plan, static_data[e],
+                                        seed.reduce_identity)
+                 for e in seed.elementwise}
+    meta = {
+        "window_ids": jnp.asarray(plan.window_ids),
+        "lane_slot": jnp.asarray(plan.lane_slot),
+        "lane_offset": jnp.asarray(plan.lane_offset),
+        "seg_ids": jnp.asarray(plan.seg_ids),
+        "gather_idx": jnp.asarray(plan.gather_idx),
+        "head_pos": jnp.asarray(plan.head_pos),
+        "head_rows": jnp.asarray(plan.head_rows),
+    }
+
+    if backend == "jax":
+        @jax.jit
+        def run(mutable, out_init):
+            lanes = _stage_a_jax(plan, meta, elem_exec, mutable,
+                                 fuse_classes=fuse_classes)
+            return _stage_b(plan, meta, lanes, out_init)
+        return run
+
+    if backend == "segsum":
+        # CPU-optimal configuration of the same plan: the Data Transfer
+        # sort already made (block, row) runs consecutive, so stage A+B
+        # collapse into ONE sorted segment-sum straight into y.  On
+        # register-rich targets (TPU VMEM / AVX-512) the log-shift path
+        # wins; on XLA-CPU each shift step round-trips memory and this
+        # form is strictly better (see EXPERIMENTS §Perf iteration log).
+        # global output row per exec lane (pads -> bucket out_len):
+        # scatter each head's row onto its (block, segment), then read it
+        # back per lane — runs are consecutive post-sort.
+        seg = plan.seg_ids
+        per_seg = np.full((plan.num_blocks, plan.lane_width), plan.out_len,
+                          np.int64)
+        hb = plan.head_pos // plan.lane_width
+        hl = plan.head_pos % plan.lane_width
+        per_seg[hb, seg[hb, hl]] = plan.head_rows
+        lane_rows = per_seg[np.arange(plan.num_blocks)[:, None], seg]
+        lane_rows = np.where(plan.valid, lane_rows, plan.out_len)
+        rows_j = jnp.asarray(lane_rows.reshape(-1), jnp.int32)
+        gidx_j = jnp.asarray(plan.gather_idx.reshape(-1), jnp.int32)
+
+        @jax.jit
+        def run_ss(mutable, out_init):
+            vals = {}
+            for g in seed.gathered:
+                vals[g] = jnp.asarray(mutable[g])[gidx_j]
+            for e in seed.elementwise:
+                vals[e] = elem_exec[e].reshape(-1)
+            term = seed.combine(vals)
+            summed = jax.ops.segment_sum(term, rows_j,
+                                         num_segments=plan.out_len + 1)
+            if seed.reduce != "add":
+                raise NotImplementedError("segsum backend: add only")
+            return out_init + summed[:plan.out_len]
+        return run_ss
+
+    if backend == "pallas":
+        from repro.kernels.unroll_spmv import ops as kops
+        if interpret is None:
+            interpret = jax.devices()[0].platform != "tpu"
+        stage_a = kops.make_stage_a(plan, meta, elem_exec,
+                                    interpret=interpret)
+
+        @jax.jit
+        def run_pl(mutable, out_init):
+            lanes = stage_a(mutable)
+            return _stage_b(plan, meta, lanes, out_init)
+        return run_pl
+
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def make_baseline_gather(seed: CodeSeed, access: Mapping[str, np.ndarray],
+                         static_data: Mapping[str, np.ndarray]):
+    """The conservative-compiler baseline: native gather + scatter-add,
+    no pattern analysis (used as the icc/-O3 stand-in by the benchmarks)."""
+    acc = {k: jnp.asarray(v) for k, v in access.items()}
+    elem = {e: jnp.asarray(static_data[e]) for e in seed.elementwise}
+
+    @jax.jit
+    def run(mutable, out_init):
+        data = dict(mutable)
+        data.update(elem)
+        return reference_execute(seed, acc, data, out_init)
+    return run

@@ -1,0 +1,57 @@
+"""Plan serialization: persist a BlockPlan so the one-time analysis
+(feature table + class binning + Data Transfer permutation) amortizes
+across processes — the offline analogue of the paper's runtime-JIT code
+cache.  msgpack + zstd, same stack as checkpoints."""
+from __future__ import annotations
+
+import dataclasses
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+from repro.core.plan import BlockPlan, PatternClass, PlanStats
+from repro.core import seed as seed_mod
+
+_ARRAYS = ("window_ids", "lane_slot", "lane_offset", "seg_ids",
+           "gather_idx", "valid", "flat_perm", "head_pos", "head_rows")
+_SCALARS = ("lane_width", "nnz", "out_len", "data_len", "num_blocks")
+
+_SEEDS = {"spmv": seed_mod.spmv_seed, "pagerank_push": seed_mod.pagerank_seed}
+
+
+def save_plan(path: str, plan: BlockPlan):
+    if plan.seed.name not in _SEEDS:
+        raise ValueError(
+            f"only registry seeds are serializable ({sorted(_SEEDS)}); "
+            f"got {plan.seed.name!r} — register its factory in planio._SEEDS")
+    payload = {
+        "seed": plan.seed.name,
+        "scalars": {k: getattr(plan, k) for k in _SCALARS},
+        "classes": [(c.ls_flag, c.op_flag, c.stream, c.start, c.stop)
+                    for c in plan.classes],
+        "stats": dataclasses.asdict(plan.stats),
+        "arrays": {k: {"dtype": str(getattr(plan, k).dtype),
+                       "shape": list(getattr(plan, k).shape),
+                       "data": np.ascontiguousarray(
+                           getattr(plan, k)).tobytes()}
+                   for k in _ARRAYS},
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    with open(path, "wb") as f:
+        f.write(zstd.ZstdCompressor(level=3).compress(raw))
+
+
+def load_plan(path: str) -> BlockPlan:
+    with open(path, "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    p = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(
+        v["shape"]) for k, v in p["arrays"].items()}
+    classes = [PatternClass(*c) for c in p["classes"]]
+    st = p["stats"]
+    st["ls_hist"] = {int(k): v for k, v in st["ls_hist"].items()}
+    st["op_hist"] = {int(k): v for k, v in st["op_hist"].items()}
+    stats = PlanStats(**st)
+    return BlockPlan(seed=_SEEDS[p["seed"]](), classes=classes, stats=stats,
+                     **p["scalars"], **arrays)

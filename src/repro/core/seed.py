@@ -1,0 +1,124 @@
+"""Code seed — the paper's user-facing computation description (§4, Alg. 4/5).
+
+A :class:`CodeSeed` is the lambda-expression analogue: it names the output,
+the access arrays (immutable), the dense arrays gathered through them
+(mutable between calls), the nnz-aligned element arrays (immutable), and the
+per-lane combine expression plus the reduction operator.  No optimization
+concerns live here — the Information Producer (feature_table), the Code
+Optimizer (plan) and the Data Transfer module (engine ingest) take it from
+there.
+
+Examples (paper Alg. 5 / Alg. 4)::
+
+    spmv = CodeSeed(
+        name="spmv",
+        output="y", out_index="row",
+        gather_index="col", gathered=("x",),
+        elementwise=("value",),
+        combine=lambda v: v["value"] * v["x"],
+        reduce="add")
+
+    pagerank = CodeSeed(
+        name="pagerank_push",
+        output="sum", out_index="n2",
+        gather_index="n1", gathered=("rank", "inv_nneighbor"),
+        elementwise=(),
+        combine=lambda v: v["rank"] * v["inv_nneighbor"],
+        reduce="add")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+REDUCE_OPS = {
+    "add": (jnp.add, 0.0),
+    "mul": (jnp.multiply, 1.0),
+    "max": (jnp.maximum, -jnp.inf),
+    "min": (jnp.minimum, jnp.inf),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeSeed:
+    """Declarative description of one irregular loop nest ``for i in range(nnz)``.
+
+    ``output[out_index[i]] = reduce(output[out_index[i]],
+        combine({g: g_arr[gather_index[i]] for g in gathered} |
+                {e: e_arr[i] for e in elementwise}))``
+    """
+
+    name: str
+    output: str
+    out_index: str
+    gather_index: str | None
+    gathered: tuple[str, ...]
+    elementwise: tuple[str, ...]
+    combine: Callable[[Mapping[str, jnp.ndarray]], jnp.ndarray]
+    reduce: str = "add"
+
+    def __post_init__(self):
+        if self.reduce not in REDUCE_OPS:
+            raise ValueError(f"unsupported reduce {self.reduce!r}; "
+                             f"supported: {sorted(REDUCE_OPS)} "
+                             "(paper §5.2: minus/division are expressed as "
+                             "add/mul with negated/inverted operands)")
+        if self.gather_index is None and self.gathered:
+            raise ValueError("gathered arrays require a gather_index")
+
+    @property
+    def reduce_op(self):
+        return REDUCE_OPS[self.reduce][0]
+
+    @property
+    def reduce_identity(self) -> float:
+        return REDUCE_OPS[self.reduce][1]
+
+
+def spmv_seed() -> CodeSeed:
+    """SpMV over COO (paper Alg. 5)."""
+    return CodeSeed(name="spmv", output="y", out_index="row",
+                    gather_index="col", gathered=("x",),
+                    elementwise=("value",),
+                    combine=lambda v: v["value"] * v["x"],
+                    reduce="add")
+
+
+def pagerank_seed() -> CodeSeed:
+    """Edge-push PageRank contribution pass (paper Alg. 4).
+
+    The division by out-degree is pre-inverted (paper §5.2: division becomes
+    multiplication by the inverse), so the mutable gathered arrays are the
+    rank vector and the immutable inverse-degree vector.
+    """
+    return CodeSeed(name="pagerank_push", output="sum", out_index="n2",
+                    gather_index="n1", gathered=("rank", "inv_nneighbor"),
+                    elementwise=(),
+                    combine=lambda v: v["rank"] * v["inv_nneighbor"],
+                    reduce="add")
+
+
+def reference_execute(seed: CodeSeed, access: Mapping[str, np.ndarray],
+                      data: Mapping[str, jnp.ndarray], out_init: jnp.ndarray,
+                      nnz: int | None = None) -> jnp.ndarray:
+    """Direct scatter oracle — the un-optimized semantics of the seed."""
+    out_idx = jnp.asarray(access[seed.out_index])
+    nnz = int(out_idx.shape[0]) if nnz is None else nnz
+    vals = {}
+    if seed.gather_index is not None:
+        gi = jnp.asarray(access[seed.gather_index])
+        for g in seed.gathered:
+            vals[g] = jnp.asarray(data[g])[gi]
+    for e in seed.elementwise:
+        vals[e] = jnp.asarray(data[e])
+    term = seed.combine(vals)
+    if seed.reduce == "add":
+        return out_init.at[out_idx].add(term)
+    if seed.reduce == "mul":
+        return out_init.at[out_idx].multiply(term)
+    if seed.reduce == "max":
+        return out_init.at[out_idx].max(term)
+    return out_init.at[out_idx].min(term)

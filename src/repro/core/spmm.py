@@ -1,0 +1,88 @@
+"""SpMM: sparse x dense matrix product on the Intelligent-Unroll plan.
+
+``Y = A_sparse @ B`` generalizes the paper's SpMV seed to row-vector
+values: the gather through ``col`` fetches whole rows of B (each row is a
+run of lane tiles — the ``L/S=1`` stream pattern at row granularity, the
+same structure the MoE dispatch kernel executes), and the §5 reduction
+machinery collapses per-(block, output-row) partial sums before the
+merged write-back.
+
+Reuses the 1-D BlockPlan verbatim: the plan is a property of the access
+arrays only (the paper's point) — the value rank is an execution detail.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.plan import BlockPlan, CostModel, build_plan
+from repro.core.seed import spmv_seed
+
+
+@dataclasses.dataclass
+class SpMM:
+    plan: BlockPlan
+    shape: tuple[int, int]
+    _run: object
+
+    @classmethod
+    def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 shape: tuple[int, int], lane_width: int = 128,
+                 cost: CostModel | None = None) -> "SpMM":
+        seed = spmv_seed()
+        cost = cost or CostModel(lane_width=lane_width)
+        plan = build_plan(seed, {"row": rows, "col": cols},
+                          out_len=shape[0], data_len=shape[1], cost=cost)
+        val_exec = eng.reorder_elementwise(plan, np.asarray(vals))  # (Bl,N)
+        gidx = jnp.asarray(plan.gather_idx, jnp.int32)              # (Bl,N)
+        head_pos = jnp.asarray(plan.head_pos)
+        head_rows = jnp.asarray(plan.head_rows)
+        seg_ids = jnp.asarray(plan.seg_ids)
+        n = plan.lane_width
+
+        # static per-class op flags drive the same specialized reduce
+        classes = [(c.op_flag, c.start, c.stop) for c in plan.classes]
+
+        @jax.jit
+        def run(bmat, y_init):
+            d = bmat.shape[1]
+            parts = []
+            for op_flag, s0, s1 in classes:
+                rowsv = bmat[gidx[s0:s1]]                   # (Bc, N, D) rows
+                term = val_exec[s0:s1][:, :, None].astype(bmat.dtype) * rowsv
+                term = _segmented_reduce_2d(term, seg_ids[s0:s1], op_flag)
+                parts.append(term)
+            lanes = jnp.concatenate(parts, 0)               # (Bl, N, D)
+            hv = lanes.reshape(-1, d)[head_pos]
+            return y_init.at[head_rows].add(hv.astype(y_init.dtype))
+
+        return cls(plan=plan, shape=shape, _run=run)
+
+    def matmat(self, bmat: jnp.ndarray,
+               y_init: jnp.ndarray | None = None) -> jnp.ndarray:
+        if y_init is None:
+            y_init = jnp.zeros((self.shape[0], bmat.shape[1]), bmat.dtype)
+        return self._run(bmat, y_init)
+
+
+def _segmented_reduce_2d(term: jnp.ndarray, seg: jnp.ndarray,
+                         op_flag: int) -> jnp.ndarray:
+    """(Bc, N, D) log-step shift-reduce along lanes (add only)."""
+    from repro.core import feature_table as ft
+    bc, n, d = term.shape
+    if op_flag == ft.FULL_REDUCE:
+        total = jnp.sum(term, axis=1)
+        return term.at[:, 0, :].set(total)
+    steps = op_flag
+    for k in range(steps):
+        sft = 1 << k
+        shifted = jnp.pad(term[:, sft:], ((0, 0), (0, sft), (0, 0)))
+        seg_shift = jnp.pad(seg[:, sft:], ((0, 0), (0, sft)),
+                            constant_values=-(2 ** 30))
+        term = jnp.where((seg == seg_shift)[:, :, None],
+                         term + shifted, term)
+    return term

@@ -1,0 +1,65 @@
+"""Shared in-kernel building blocks for the Intelligent-Unroll Pallas kernels.
+
+TPU adaptation of the paper's instruction groups:
+  * ``permute_onehot`` — the paper's ``permutation + select`` pair (Fig. 6).
+    On TPU a static per-lane permutation is expressed as a small one-hot
+    matmul so it runs on the MXU; the select masks fold into the one-hot
+    (lane j's row has its single 1 at ``slot[j] * N + offset[j]``).
+  * ``segmented_reduce_lanes`` — the paper's log-step shuffle-reduce (§5,
+    Fig. 5): ``op_flag`` static steps of masked shift-combine; masks are
+    derived on the fly from segment-id compares (cheaper than the paper's
+    stored M mask vectors — a beyond-paper micro-optimization, VPU compares
+    are free relative to the metadata loads they replace).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SEG_PAD = -(2 ** 30)
+
+REDUCE_FNS = {
+    "add": (jnp.add, 0.0, jnp.sum),
+    "mul": (jnp.multiply, 1.0, jnp.prod),
+    "max": (jnp.maximum, -jnp.inf, jnp.max),
+    "min": (jnp.minimum, jnp.inf, jnp.min),
+}
+
+FULL_REDUCE = -1
+
+
+def permute_onehot(windows: jnp.ndarray, slot: jnp.ndarray,
+                   offset: jnp.ndarray) -> jnp.ndarray:
+    """Gather-replacement permute: windows (M, N) -> (N,) per-lane values.
+
+    ``slot``/``offset`` are (1, N) int32.  Implemented as
+    ``one_hot(slot * N + offset) @ concat(windows)`` — an (N, M*N) x (M*N,)
+    matmul that maps onto the MXU.  Equivalent to
+    ``concat(windows)[slot * N + offset]``.
+    """
+    m, n = windows.shape
+    flat = windows.reshape(m * n).astype(jnp.float32)
+    sel = (slot.astype(jnp.int32) * n + offset.astype(jnp.int32)).reshape(n)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, m * n), 1)
+    onehot = (cols == sel[:, None]).astype(jnp.float32)
+    return onehot @ flat
+
+
+def segmented_reduce_lanes(term: jnp.ndarray, seg: jnp.ndarray,
+                           op_flag: int, reduce: str) -> jnp.ndarray:
+    """(1, N) lane vector -> (1, N) with each segment head holding the full
+    segment reduction.  ``op_flag`` is static (one kernel specialization per
+    pattern class — the paper's per-flag code generation)."""
+    op, identity, full = REDUCE_FNS[reduce]
+    if op_flag == FULL_REDUCE:
+        total = full(term.astype(jnp.float32))
+        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape, 1)
+        return jnp.where(lane == 0, total, term)
+    for k in range(op_flag):
+        d = 1 << k
+        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+                          constant_values=identity)
+        seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
+                            constant_values=SEG_PAD)
+        term = jnp.where(seg == seg_shift, op(term, shifted), term)
+    return term

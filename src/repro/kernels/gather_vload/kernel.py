@@ -1,0 +1,55 @@
+"""Standalone gather-replacement kernel (paper §6, Fig. 6).
+
+Replaces ``x[idx]`` (per-element gather) for one pattern class with
+``ls_flag`` contiguous lane-tile loads + a one-hot MXU permute + selects.
+This is the building block the SpMV/MoE kernels reuse; standalone form for
+unit tests and for use as a drop-in embedding-lookup path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _body(win_ref, *refs, ls: int, stream: bool):
+    win_tiles = refs[:ls]
+    slot_ref, off_ref = refs[ls:ls + 2]
+    out_ref = refs[-1]
+    if stream:
+        out_ref[...] = win_tiles[0][...].astype(out_ref.dtype)
+        return
+    windows = jnp.concatenate([t[...] for t in win_tiles], axis=0)
+    out = common.permute_onehot(windows, slot_ref[...], off_ref[...])
+    out_ref[...] = out.reshape(1, -1).astype(out_ref.dtype)
+
+
+def gather_vload(x_view: jnp.ndarray, win_ids: jnp.ndarray,
+                 slot: jnp.ndarray, off: jnp.ndarray, *, ls: int,
+                 stream: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """x_view (W, N) lane-tile view; win_ids (B, ls) int32; slot/off (B, N)
+    int32.  Returns (B, N) == concat(x_view[win_ids[b]])[slot*N+off] per b."""
+    b, n = slot.shape
+
+    def _win_index_map(k):
+        def im(i, w):
+            return (w[i, k], 0)
+        return im
+
+    in_specs = [pl.BlockSpec((1, n), _win_index_map(k)) for k in range(ls)]
+    in_specs += [pl.BlockSpec((1, n), lambda i, w: (i, 0))] * 2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, n), lambda i, w: (i, 0)))
+    body = functools.partial(_body, ls=ls, stream=stream)
+    return pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), x_view.dtype),
+        interpret=interpret,
+    )(win_ids, *([x_view] * ls), slot, off)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for gather_vload."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gather_vload.kernel import gather_vload
+
+
+@functools.partial(jax.jit, static_argnames=("ls", "stream", "interpret"))
+def gather_vload_op(x_view, win_ids, slot, off, ls: int,
+                    stream: bool = False, interpret: bool = True):
+    return gather_vload(x_view, win_ids, slot, off, ls=ls, stream=stream,
+                        interpret=interpret)

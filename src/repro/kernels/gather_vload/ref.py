@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for gather_vload: it is exactly a gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_reference(x: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """x (L,), idx (B, N) -> (B, N)."""
+    return np.asarray(jnp.asarray(x)[jnp.asarray(idx)])
+
+
+def plan_gather_reference(x_view: np.ndarray, win_ids: np.ndarray,
+                          slot: np.ndarray, off: np.ndarray) -> np.ndarray:
+    """Same semantics expressed through the plan operands."""
+    b, n = slot.shape
+    gathered = x_view[win_ids]                      # (B, ls, N)
+    flat = gathered.reshape(b, -1)
+    lane = slot.astype(np.int64) * n + off.astype(np.int64)
+    return np.take_along_axis(flat, lane, axis=1)

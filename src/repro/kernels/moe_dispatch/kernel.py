@@ -1,0 +1,47 @@
+"""MoE token-dispatch kernel — the paper's gather replacement at row tile
+granularity.
+
+Expert dispatch is a runtime gather of token rows through the (immutable
+per step) routing access array.  After the Data Transfer sort by expert id
+(the same in-block sort as §5), the row index stream is piecewise
+contiguous, so each row fetch is one lane-tile-aligned DMA — the ``L/S=1``
+stream pattern of the paper lifted from elements to rows.  The kernel is a
+row-granular scalar-prefetch gather: grid (rows, d_tiles); the row index
+feeds the BlockSpec index_map, so HBM->VMEM row DMAs pipeline across grid
+steps.  The same kernel implements the return/combine gather.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(rows_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+def row_gather(src: jnp.ndarray, row_ids: jnp.ndarray, d_tile: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """out[i, :] = src[row_ids[i], :].
+
+    src (T, D) — token activations (append a zero row for padding slots);
+    row_ids (R,) int32.  d_tile bounds the VMEM working tile (<= D).
+    """
+    t, d = src.shape
+    r = int(row_ids.shape[0])
+    dt = min(d_tile, d)
+    while d % dt:
+        dt -= 1
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, d // dt),
+        in_specs=[pl.BlockSpec((1, dt), lambda i, j, rows: (rows[i], j))],
+        out_specs=pl.BlockSpec((1, dt), lambda i, j, rows: (i, j)),
+    )
+    return pl.pallas_call(
+        _body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, d), src.dtype),
+        interpret=interpret,
+    )(row_ids, src)

@@ -1,0 +1,13 @@
+"""Jitted wrapper for moe_dispatch.row_gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_dispatch.kernel import row_gather
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
+def row_gather_op(src, row_ids, d_tile: int = 512, interpret: bool = True):
+    return row_gather(src, row_ids, d_tile=d_tile, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for moe_dispatch.row_gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def row_gather_reference(src: np.ndarray, row_ids: np.ndarray) -> np.ndarray:
+    return np.asarray(jnp.asarray(src)[jnp.asarray(row_ids)])

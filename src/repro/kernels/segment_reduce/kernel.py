@@ -1,0 +1,58 @@
+"""Standalone Pallas segmented-reduction kernel (paper §5, Fig. 5).
+
+Reduces consecutive-run segments inside lane blocks with ``op_flag``
+log-step masked shift-combines.  Grid tiles the block dimension; each grid
+step owns a (rows_per_step, N) VMEM tile.  Unlike the per-class SpMV kernel
+this one packs 8 lane rows per step (sublane-aligned f32 tile), since no
+per-row window indirection is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _body(x_ref, seg_ref, o_ref, *, op_flag: int, reduce: str):
+    term = x_ref[...].astype(jnp.float32)
+    seg = seg_ref[...]
+    op, identity, full = common.REDUCE_FNS[reduce]
+    if op_flag == common.FULL_REDUCE:
+        total = full(term, axis=1, keepdims=True)
+        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape, 1)
+        term = jnp.where(lane == 0, total, term)
+    else:
+        for k in range(op_flag):
+            d = 1 << k
+            shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+                              constant_values=identity)
+            seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
+                                constant_values=common.SEG_PAD)
+            term = jnp.where(seg == seg_shift, op(term, shifted), term)
+    o_ref[...] = term.astype(o_ref.dtype)
+
+
+def segment_reduce(x: jnp.ndarray, seg_ids: jnp.ndarray, op_flag: int,
+                   reduce: str = "add", rows_per_step: int = 8,
+                   interpret: bool = True) -> jnp.ndarray:
+    """x (B, N) values, seg_ids (B, N) int32 consecutive-run segment ids
+    (block-local).  Returns (B, N) with head lanes holding segment totals."""
+    b, n = x.shape
+    r = min(rows_per_step, b)
+    while b % r:
+        r -= 1
+    grid = (b // r,)
+    body = functools.partial(_body, op_flag=op_flag, reduce=reduce)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, n), lambda i: (i, 0)),
+                  pl.BlockSpec((r, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=interpret,
+    )(x, seg_ids)

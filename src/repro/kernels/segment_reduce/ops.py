@@ -1,0 +1,16 @@
+"""Jitted wrapper for segment_reduce."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.segment_reduce.kernel import segment_reduce
+
+
+@functools.partial(jax.jit, static_argnames=("op_flag", "reduce",
+                                             "rows_per_step", "interpret"))
+def segment_reduce_op(x, seg_ids, op_flag: int, reduce: str = "add",
+                      rows_per_step: int = 8, interpret: bool = True):
+    return segment_reduce(x, seg_ids, op_flag, reduce, rows_per_step,
+                          interpret)

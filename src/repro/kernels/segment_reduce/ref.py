@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the segment_reduce kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def segment_reduce_reference(x: np.ndarray, seg_ids: np.ndarray,
+                             reduce: str = "add") -> np.ndarray:
+    """Exact suffix-within-segment accumulation at fp64."""
+    out = np.array(x, dtype=np.float64)
+    b, n = out.shape
+    if reduce == "add":
+        op = np.add
+    elif reduce == "mul":
+        op = np.multiply
+    elif reduce == "max":
+        op = np.maximum
+    else:
+        op = np.minimum
+    for bi in range(b):
+        for j in range(n - 2, -1, -1):
+            if seg_ids[bi, j] == seg_ids[bi, j + 1]:
+                out[bi, j] = op(out[bi, j], out[bi, j + 1])
+    return out.astype(x.dtype)
+
+
+def head_sums_reference(x: np.ndarray, seg_ids: np.ndarray,
+                        reduce: str = "add") -> np.ndarray:
+    """Per-(block, segment) totals via jnp.segment-style grouping."""
+    b, n = x.shape
+    glob = seg_ids + (np.arange(b)[:, None] * n)
+    import jax.ops
+    return np.asarray(jax.ops.segment_sum(jnp.asarray(x.reshape(-1)),
+                                          jnp.asarray(glob.reshape(-1)),
+                                          num_segments=b * n)).reshape(b, n)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for Intelligent-Unroll stage A (one pattern class).
+
+One ``pallas_call`` per pattern class (the paper's per-pattern generated
+code).  Grid = blocks of the class; per grid step the kernel
+
+  1. receives the class's ``ls_flag`` windows of each gathered array as
+     VMEM tiles — the window *index* is runtime data (scalar-prefetched
+     ``window_ids``), so the HBM->VMEM DMAs are dynamic but tile-granular
+     and pipelined across grid steps by the Pallas scheduler.  This is the
+     paper's ``vload`` group replacing the per-element ``gather``.
+  2. applies the static per-lane permutation + select via a one-hot MXU
+     matmul (paper Fig. 6: permutation + select instructions),
+  3. evaluates the seed's combine expression on the lane vectors,
+  4. runs ``op_flag`` masked shift-reduce steps (paper Fig. 5) so each
+     segment head lane holds the segment total.
+
+Outputs the (1, N) post-reduce lane vector; the merged write-back (Fig. 4)
+happens outside (stage B) on the compressed head stream.
+
+VMEM budget per step: (ls_flag * n_gathered + n_elementwise + 4) lane tiles
+of N floats/ints — a few KB at N=128; BlockSpecs keep everything lane-tile
+aligned (last dim N, MXU/VPU native).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+
+def _stage_a_body(win_ref, *refs, combine: Callable, gathered: tuple,
+                  elementwise: tuple, ls: int, op: int, stream: bool,
+                  reduce: str, out_dtype):
+    """Kernel body. ``refs`` layout:
+    [g0_win0..g0_win{ls-1}, g1_win0.., ...] + [elem...] +
+    [slot, offset, seg] + [out]."""
+    n_g = len(gathered)
+    n_e = len(elementwise)
+    win_refs = refs[: n_g * ls]
+    elem_refs = refs[n_g * ls: n_g * ls + n_e]
+    slot_ref, off_ref, seg_ref = refs[n_g * ls + n_e: n_g * ls + n_e + 3]
+    out_ref = refs[-1]
+
+    vals = {}
+    for gi, g in enumerate(gathered):
+        tiles = [win_refs[gi * ls + k][...] for k in range(ls)]  # ls x (1, N)
+        if stream:
+            vals[g] = tiles[0][0].astype(jnp.float32)
+        else:
+            windows = jnp.concatenate(tiles, axis=0)             # (ls, N)
+            vals[g] = common.permute_onehot(windows, slot_ref[...],
+                                            off_ref[...])
+    for ei, e in enumerate(elementwise):
+        vals[e] = elem_refs[ei][...][0].astype(jnp.float32)
+
+    term = combine(vals).reshape(1, -1)
+    term = common.segmented_reduce_lanes(term, seg_ref[...], op, reduce)
+    out_ref[...] = term.astype(out_dtype)
+
+
+def class_stage_a(win_ids: jnp.ndarray, gathered_views: dict,
+                  elem_blocks: dict, slot: jnp.ndarray, off: jnp.ndarray,
+                  seg: jnp.ndarray, *, combine: Callable,
+                  gathered: tuple, elementwise: tuple, ls: int, op: int,
+                  stream: bool, reduce: str, out_dtype=jnp.float32,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Launch stage A for one pattern class.
+
+    win_ids        (Bc, ls) int32 — scalar-prefetched window indices
+    gathered_views g -> (W, N) lane-tile view of the dense array
+    elem_blocks    e -> (Bc, N) exec-order immutable data
+    slot/off/seg   (Bc, N) int32
+    returns        (Bc, N) post-reduce lane matrix
+    """
+    bc, n = slot.shape
+    body = functools.partial(_stage_a_body, combine=combine,
+                             gathered=gathered, elementwise=elementwise,
+                             ls=ls, op=op, stream=stream, reduce=reduce,
+                             out_dtype=out_dtype)
+
+    def _win_index_map(k):
+        def im(b, w):
+            return (w[b, k], 0)
+        return im
+
+    in_specs = []
+    operands = []
+    for g in gathered:
+        for k in range(ls):
+            in_specs.append(pl.BlockSpec((1, n), _win_index_map(k)))
+            operands.append(gathered_views[g])
+    for e in elementwise:
+        in_specs.append(pl.BlockSpec((1, n), lambda b, w: (b, 0)))
+        operands.append(elem_blocks[e])
+    for meta in (slot, off, seg):
+        in_specs.append(pl.BlockSpec((1, n), lambda b, w: (b, 0)))
+        operands.append(meta)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bc,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, n), lambda b, w: (b, 0)),
+    )
+    fn = pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bc, n), out_dtype),
+        interpret=interpret,
+    )
+    return fn(win_ids, *operands)

@@ -1,0 +1,59 @@
+"""Jitted wrapper assembling per-class Pallas launches into stage A.
+
+``make_stage_a(plan, ...)`` returns a function ``fn(mutable) -> (B, N)``
+lanes matrix in exec-block order: one ``pallas_call`` per specialized
+pattern class + the XLA native-gather path for fallback classes (by
+definition "let the compiler emit the gather" — paper §6.3 applies the
+rewrite only when the flags indicate a benefit).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core.plan import GATHER_FALLBACK, BlockPlan
+from repro.kernels.unroll_spmv.kernel import class_stage_a
+
+
+def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True):
+    seed = plan.seed
+    # per-class static metadata, upcast to kernel-friendly int32 once
+    class_meta = []
+    for c in plan.classes:
+        s = plan.class_slice(c)
+        class_meta.append(dict(
+            win=jnp.asarray(plan.window_ids[s][:, :max(c.ls_flag, 1)],
+                            jnp.int32),
+            slot=jnp.asarray(plan.lane_slot[s], jnp.int32),
+            off=jnp.asarray(plan.lane_offset[s], jnp.int32),
+            seg=jnp.asarray(plan.seg_ids[s], jnp.int32),
+            gidx=jnp.asarray(plan.gather_idx[s], jnp.int32),
+        ))
+
+    def stage_a(mutable):
+        views = {g: eng._pad_gathered(plan, jnp.asarray(mutable[g]))
+                 for g in seed.gathered}
+        parts = []
+        for c, cm in zip(plan.classes, class_meta):
+            s = plan.class_slice(c)
+            elem_blocks = {e: elem_exec[e][s] for e in seed.elementwise}
+            if c.ls_flag == GATHER_FALLBACK and seed.gather_index is not None:
+                # native gather path (XLA) + in-XLA segmented reduce
+                vals = {g: jnp.asarray(mutable[g])[cm["gidx"]]
+                        for g in seed.gathered}
+                vals.update(elem_blocks)
+                term = seed.combine(vals)
+                term = eng.segmented_reduce(term, cm["seg"], c.op_flag,
+                                            seed.reduce,
+                                            seed.reduce_identity)
+                parts.append(term)
+                continue
+            parts.append(class_stage_a(
+                cm["win"], views, elem_blocks, cm["slot"], cm["off"],
+                cm["seg"], combine=seed.combine, gathered=seed.gathered,
+                elementwise=seed.elementwise, ls=max(c.ls_flag, 1),
+                op=c.op_flag, stream=c.stream, reduce=seed.reduce,
+                interpret=interpret))
+        return jnp.concatenate(parts, axis=0)
+
+    return stage_a

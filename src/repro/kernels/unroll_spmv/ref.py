@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the unroll_spmv stage-A kernel.
+
+Semantics of stage A for one pattern class, written with plain gathers and
+a per-segment reduction — no windows, no shift tricks.  The kernel must
+match this bit-for-bit in f32 (modulo reduction-order-insensitive ops) and
+within tolerance for float accumulation differences.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def stage_a_reference(gather_idx: np.ndarray, seg_ids: np.ndarray,
+                      gathered_data: dict, elem_blocks: dict,
+                      combine, reduce: str = "add") -> jnp.ndarray:
+    """gather_idx (Bc, N) int — post-sort gather indices
+    seg_ids    (Bc, N) int — block-local segment ids (runs consecutive)
+    gathered_data g -> (L,) dense array
+    elem_blocks   e -> (Bc, N)
+    Returns (Bc, N) where each segment's head lane holds the segment
+    reduction and other lanes hold unspecified values matching the kernel's
+    suffix-accumulation (we reproduce them exactly for bitwise comparison).
+    """
+    bc, n = gather_idx.shape
+    vals = {g: jnp.asarray(arr)[gather_idx] for g, arr in gathered_data.items()}
+    vals.update({e: jnp.asarray(v) for e, v in elem_blocks.items()})
+    term = np.asarray(combine(vals), dtype=np.float64)
+
+    out = np.array(term)
+    if reduce == "add":
+        op = np.add
+    elif reduce == "mul":
+        op = np.multiply
+    elif reduce == "max":
+        op = np.maximum
+    else:
+        op = np.minimum
+    # exact suffix-within-segment accumulation (what log-shift computes)
+    for b in range(bc):
+        for j in range(n - 2, -1, -1):
+            if seg_ids[b, j] == seg_ids[b, j + 1]:
+                out[b, j] = op(out[b, j], out[b, j + 1])
+    return jnp.asarray(out, jnp.float32)
+
+
+def head_values_reference(gather_idx, seg_ids, head_mask, gathered_data,
+                          elem_blocks, combine, reduce: str = "add"):
+    """Only the head-lane values (the part stage B consumes)."""
+    lanes = stage_a_reference(gather_idx, seg_ids, gathered_data,
+                              elem_blocks, combine, reduce)
+    return np.asarray(lanes)[np.asarray(head_mask)]

@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips ("data", "model");
+multi-pod: 2x16x16 = 512 chips ("pod", "data", "model").  The dry-run
+launcher sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import to build these meshes on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int | None = None, model: int = 1):
+    """Mesh over whatever devices exist (tests / single-host training)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axis names present in a mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,120 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* axis name
+(assigned at init / via ``layers.shard``); a rules table maps logical
+names -> mesh axes.  Changing distribution strategy = changing the table —
+this is the main §Perf hillclimb lever, no model-code edits required.
+
+Baseline rules (paper-faithful FSDP+TP):
+  batch         -> (pod, data)      data parallel
+  embed         -> data (params)    FSDP: per-layer all-gather inside scan
+  heads/kv/mlp  -> model            Megatron tensor parallel
+  experts       -> model            expert parallel (MoE)
+  vocab         -> model            sharded logits / embedding
+  layers        -> None             scanned stack axis, never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+Rules = dict
+
+
+def default_rules(mesh: Mesh) -> Rules:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {
+        "batch": dp,
+        "embed": "data",          # FSDP shard dim for params
+        "embed_act": None,        # activation d_model dim (replicated; set
+                                  # to "model" for sequence-parallel runs)
+        "heads": "model",
+        "heads_flat": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "router_experts": "model",  # variant lever: None kills E-sharded logits
+        "expert_mlp": None,     # expert FFN hidden (EP already uses model)
+        "vocab": "model",
+        "norm": None,
+        "layers": None,
+    }
+
+
+def replicated_rules(mesh: Mesh) -> Rules:
+    """Pure DP baseline (small models / ablations)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return {"batch": dp}
+
+
+@dataclasses.dataclass
+class Shd:
+    """Carries (mesh, rules) through model code for activation constraints.
+
+    Spec resolution is SHAPE-AWARE: if a dimension is not divisible by the
+    product of its mapped mesh axes, that dimension falls back to
+    replication (Megatron-style, e.g. kv_heads=8 with model=16 replicates
+    KV heads while Q heads stay sharded).  Fallbacks are what make one
+    rules table serve all ten architectures.
+    """
+    mesh: Mesh
+    rules: Rules
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, names: Sequence[str | None],
+             shape: Sequence[int] | None = None) -> PS:
+        entries = []
+        for i, n in enumerate(names):
+            ax = self.rules.get(n) if n is not None else None
+            if ax is not None and shape is not None:
+                if shape[i] % self._axis_size(ax) != 0:
+                    ax = None          # divisibility fallback: replicate
+            entries.append(ax)
+        return PS(*entries)
+
+    def named(self, names: Sequence[str | None],
+              shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def constrain(self, x, names: Sequence[str | None]):
+        if x.ndim != len(names):
+            raise ValueError(f"rank mismatch {x.shape} vs {names}")
+        return jax.lax.with_sharding_constraint(
+            x, self.named(names, x.shape))
+
+
+def params_shardings(shd: Shd, axes_tree, values_tree=None):
+    """Axes pytree (+ optional shapes tree) -> NamedSharding pytree."""
+    if values_tree is None:
+        return jax.tree.map(
+            lambda axes: shd.named(axes),
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_axes = jax.tree.flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))[0]
+    flat_vals, tdef = jax.tree.flatten(values_tree)
+    out = [shd.named(a, v.shape) for a, v in zip(flat_axes, flat_vals)]
+    return tdef.unflatten(out)
+
+
+def batch_sharding(shd: Shd, batch_tree):
+    """Shard every batch leaf on its leading (batch) dim (shape-aware:
+    batch=1 long-context cells fall back to replicated)."""
+    def one(x):
+        names = ("batch",) + (None,) * (x.ndim - 1)
+        return shd.named(names, getattr(x, "shape", None))
+    return jax.tree.map(one, batch_tree)

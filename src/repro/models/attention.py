@@ -1,0 +1,138 @@
+"""GQA/MQA attention with full / sliding-window / prefix-LM masking and a
+decode path over an externally-managed KV cache.
+
+Sharding (logical axes): heads -> "heads" (tensor-parallel), kv heads ->
+"kv_heads", batch -> "batch", sequence kept replicated across model by
+default (sequence-parallel variants are a sharding-rules change, not a code
+change).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as pr
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attention(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    return {
+        "wq": pr.normal(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": pr.normal(ks[1], (d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": pr.normal(ks[2], (d, kh, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": pr.normal(ks[3], (h, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+
+
+def _mask(q_pos, kv_pos, kind: str, window: int, prefix_len: int):
+    """(..., S_q, S_kv) additive mask.  kind: causal | swa | prefix."""
+    causal = q_pos[..., :, None] >= kv_pos[..., None, :]
+    if kind == "swa":
+        keep = causal & (q_pos[..., :, None] - kv_pos[..., None, :] < window)
+    elif kind == "prefix":
+        # prefix-LM (paligemma): full attention within [0, prefix_len)
+        keep = causal | (kv_pos[..., None, :] < prefix_len)
+    elif kind == "bidir":
+        keep = jnp.ones_like(causal)
+    else:
+        keep = causal
+    return jnp.where(keep, 0.0, NEG_INF)
+
+
+def _qkv(p, x, cfg, positions, theta, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if rope:
+        q = L.apply_rope(q, positions, theta)
+        k = L.apply_rope(k, positions, theta)
+    q = q * (cfg.head_dim ** -0.5)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, shd, softcap: float = 0.0):
+    """q (B,S,H,D) grouped against k/v (B,T,Kh,D)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    q = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = L.softcap(scores, softcap)
+    scores = scores + mask[:, None, None, :, :] if mask.ndim == 3 else \
+        scores + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def attention(p, x, *, cfg, kind: str, positions, shd=None,
+              theta: float | None = None, prefix_len: int = 0,
+              rope: bool = True, return_kv: bool = False):
+    """Full-sequence (training / prefill) attention."""
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _qkv(p, x, cfg, positions, theta, rope)
+    q = L.shard(q, ("batch", None, "heads", None), shd)
+    k = L.shard(k, ("batch", None, "kv_heads", None), shd)
+    v = L.shard(v, ("batch", None, "kv_heads", None), shd)
+    mask = _mask(positions, positions, kind, cfg.window, prefix_len)
+    out = _sdpa(q, k, v, mask, shd, cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    out = L.shard(out, ("batch", None, "embed_act"), shd)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(p, x, kv_src, *, cfg, shd=None) -> jnp.ndarray:
+    """Encoder-decoder cross attention (whisper). No RoPE, no mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
+    q = q * (cfg.head_dim ** -0.5)
+    zero = jnp.zeros((x.shape[0], x.shape[1], k.shape[1]), jnp.float32)
+    out = _sdpa(q, k, v, zero, shd, cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return L.shard(out, ("batch", None, "embed_act"), shd)
+
+
+def attention_decode(p, x, cache, *, cfg, kind: str, cur_pos, shd=None,
+                     theta: float | None = None, prefix_len: int = 0,
+                     ring: bool = False):
+    """Single-token decode. x (B, 1, D); cache dict with k/v (B, T, Kh, Dh).
+
+    ``ring=True``: the cache is a ring buffer of length T (== the sliding
+    window for swa layers) — slot ``cur_pos % T`` is overwritten and kv
+    positions are reconstructed modularly.  This is what makes long-context
+    decode feasible: local layers carry O(window) state, not O(seq).
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions, theta)
+    t = cache["k"].shape[1]
+    slot = (cur_pos % t) if ring else cur_pos
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    slots = jnp.arange(t, dtype=jnp.int32)[None, :]
+    if ring:
+        # token position stored in slot s after writing cur_pos
+        kv_pos = cur_pos - ((cur_pos - slots) % t)
+    else:
+        kv_pos = slots
+    valid = (kv_pos >= 0) & (kv_pos <= cur_pos)
+    if kind == "swa":
+        valid &= kv_pos > cur_pos - cfg.window
+    elif kind == "prefix":
+        valid |= (kv_pos < prefix_len) & (kv_pos >= 0)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, :]        # (1, 1, T)
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype),
+                jnp.broadcast_to(mask, (b, 1, t)), shd, cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v}

@@ -1,0 +1,241 @@
+"""Per-family transformer blocks: init + full-seq apply + decode apply.
+
+Each family defines one *scannable layer* (homogeneous params stacked on a
+leading "layers" axis) plus optional non-scanned shared params (zamba2's
+weight-tied attention block).  Heterogeneous per-layer behaviour (gemma3's
+5:1 local:global) is an int ``kind`` array consumed by ``lax.switch``
+inside the scan body — both branches compile once, no unrolling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import mlp as MLP
+from repro.models import moe as MOE
+from repro.models import params as pr
+from repro.models import rwkv6 as R6
+
+
+# --------------------------------------------------------------- dense / moe
+def init_dense_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "attn": A.init_attention(ks[1], cfg),
+        "ln_mlp": L.init_rmsnorm(ks[2], cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = MLP.init_mlp(ks[3], cfg)
+    return p
+
+
+def _attn_kind(cfg, kind_flag):
+    """kind_flag: 0 = primary attention, 1 = alternate (local window)."""
+    if cfg.attn_kind == "local_global":
+        return ("swa", cfg.rope_local_theta) if kind_flag else \
+            ("full", cfg.rope_theta)
+    if cfg.attn_kind == "swa":
+        return ("swa", cfg.rope_theta)
+    return ("full", cfg.rope_theta)
+
+
+def dense_layer(p, x, *, cfg, kind_flag: int, positions, shd,
+                prefix_len: int = 0, return_kv: bool = False):
+    kind, theta = _attn_kind(cfg, kind_flag)
+    if cfg.family == "vlm":
+        kind = "prefix"
+    h = A.attention(p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps),
+                    cfg=cfg, kind=kind, positions=positions, shd=shd,
+                    theta=theta, prefix_len=prefix_len, return_kv=return_kv)
+    kv = None
+    if return_kv:
+        h, kv = h
+    x = x + h
+    hin = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h, aux = MOE.moe(p["moe"], hin, cfg, shd=shd)
+    else:
+        h, aux = MLP.mlp(p["mlp"], hin, cfg, shd=shd), {}
+    if return_kv:
+        return x + h, aux, kv
+    return x + h, aux
+
+
+def dense_layer_decode(p, x, cache, *, cfg, kind_flag: int, cur_pos, shd,
+                       prefix_len: int = 0, ring: bool = False):
+    kind, theta = _attn_kind(cfg, kind_flag)
+    if cfg.family == "vlm":
+        kind = "prefix"
+    h, cache = A.attention_decode(
+        p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cache,
+        cfg=cfg, kind=kind, cur_pos=cur_pos, shd=shd, theta=theta,
+        prefix_len=prefix_len, ring=ring)
+    x = x + h
+    hin = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        h, _ = MOE.moe(p["moe"], hin, cfg, shd=shd)
+    else:
+        h = MLP.mlp(p["mlp"], hin, cfg, shd=shd)
+    return x + h, cache
+
+
+# --------------------------------------------------------------------- rwkv
+def init_rwkv_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_t": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "time_mix": R6.init_rwkv6(ks[1], cfg),
+        "ln_c": L.init_rmsnorm(ks[2], cfg.d_model, cfg.param_dtype),
+        "channel_mix": R6.init_rwkv_channel_mix(ks[3], cfg),
+    }
+
+
+def rwkv_layer(p, x, *, cfg, shd, state=None):
+    """state: (wkv, x_last_t, x_last_c) or None (zeros)."""
+    b, _, d = x.shape
+    wkv = None if state is None else state[0]
+    xlt = None if state is None else state[1]
+    xlc = None if state is None else state[2]
+    hin = L.rmsnorm(p["ln_t"], x, cfg.norm_eps)
+    h, (wkv2, xlt2) = R6.rwkv6_time_mix(p["time_mix"], hin, cfg, shd=shd,
+                                        state=wkv, x_last=xlt)
+    x = x + h
+    hin = L.rmsnorm(p["ln_c"], x, cfg.norm_eps)
+    h, xlc2 = R6.rwkv_channel_mix(p["channel_mix"], hin, cfg, shd=shd,
+                                  x_last=xlc)
+    return x + h, (wkv2, xlt2, xlc2)
+
+
+# ------------------------------------------------------------------- hybrid
+def init_mamba_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "mamba": M2.init_mamba2(ks[1], cfg),
+    }
+
+
+def init_shared_attn_block(key, cfg) -> dict:
+    """zamba2: one weight-tied attention+MLP block reused every k layers."""
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_attn": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "attn": A.init_attention(ks[1], cfg),
+        "ln_mlp": L.init_rmsnorm(ks[2], cfg.d_model, cfg.param_dtype),
+        "mlp": MLP.init_mlp(ks[3], cfg),
+    }
+
+
+def mamba_layer(p, x, *, cfg, shd, state=None, conv_state=None):
+    hin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    h, new_state, new_conv = M2.mamba2_block(p["mamba"], hin, cfg, shd=shd,
+                                             state=state,
+                                             conv_state=conv_state)
+    return x + h, new_state, new_conv
+
+
+def shared_attn_block(p, x, *, cfg, positions, shd, return_kv: bool = False):
+    h = A.attention(p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps),
+                    cfg=cfg, kind="full", positions=positions, shd=shd,
+                    return_kv=return_kv)
+    kv = None
+    if return_kv:
+        h, kv = h
+    x = x + h
+    h = MLP.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg,
+                shd=shd)
+    if return_kv:
+        return x + h, kv
+    return x + h
+
+
+def shared_attn_block_decode(p, x, cache, *, cfg, cur_pos, shd):
+    h, cache = A.attention_decode(
+        p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps), cache,
+        cfg=cfg, kind="full", cur_pos=cur_pos, shd=shd)
+    x = x + h
+    h = MLP.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg,
+                shd=shd)
+    return x + h, cache
+
+
+# ------------------------------------------------------------------- encdec
+def init_encoder_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_attn": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "attn": A.init_attention(ks[1], cfg),
+        "ln_mlp": L.init_rmsnorm(ks[2], cfg.d_model, cfg.param_dtype),
+        "mlp": MLP.init_mlp(ks[3], cfg),
+    }
+
+
+def encoder_layer(p, x, *, cfg, positions, shd):
+    h = A.attention(p["attn"], L.rmsnorm(p["ln_attn"], x, cfg.norm_eps),
+                    cfg=cfg, kind="bidir", positions=positions, shd=shd)
+    x = x + h
+    h = MLP.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg,
+                shd=shd)
+    return x + h
+
+
+def init_decoder_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "ln_self": L.init_rmsnorm(ks[0], cfg.d_model, cfg.param_dtype),
+        "self_attn": A.init_attention(ks[1], cfg),
+        "ln_cross": L.init_rmsnorm(ks[2], cfg.d_model, cfg.param_dtype),
+        "cross_attn": A.init_attention(ks[3], cfg),
+        "ln_mlp": L.init_rmsnorm(ks[4], cfg.d_model, cfg.param_dtype),
+        "mlp": MLP.init_mlp(ks[5], cfg),
+    }
+
+
+def decoder_layer(p, x, enc_out, *, cfg, positions, shd,
+                  return_kv: bool = False):
+    h = A.attention(p["self_attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps),
+                    cfg=cfg, kind="causal", positions=positions, shd=shd,
+                    return_kv=return_kv)
+    kv = None
+    if return_kv:
+        h, kv = h
+    x = x + h
+    xin = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+    h = A.cross_attention(p["cross_attn"], xin, enc_out, cfg=cfg, shd=shd)
+    x = x + h
+    h = MLP.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg,
+                shd=shd)
+    if return_kv:
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross_attn"]["wk"].astype(x.dtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross_attn"]["wv"].astype(x.dtype))
+        return x + h, (kv[0], kv[1], ck, cv)
+    return x + h
+
+
+def decoder_layer_decode(p, x, cache, enc_kv, *, cfg, cur_pos, shd):
+    h, cache = A.attention_decode(
+        p["self_attn"], L.rmsnorm(p["ln_self"], x, cfg.norm_eps), cache,
+        cfg=cfg, kind="causal", cur_pos=cur_pos, shd=shd)
+    x = x + h
+    # cross attention against precomputed encoder k/v
+    xin = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xin,
+                   p["cross_attn"]["wq"].astype(x.dtype))
+    q = q * (cfg.head_dim ** -0.5)
+    zero = jnp.zeros((x.shape[0], 1, enc_kv["k"].shape[1]), jnp.float32)
+    h = A._sdpa(q, enc_kv["k"].astype(x.dtype), enc_kv["v"].astype(x.dtype),
+                zero, shd, cfg.logit_softcap)
+    h = jnp.einsum("bshk,hkd->bsd", h,
+                   p["cross_attn"]["wo"].astype(x.dtype))
+    x = x + h
+    h = MLP.mlp(p["mlp"], L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps), cfg,
+                shd=shd)
+    return x + h, cache

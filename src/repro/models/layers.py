@@ -1,0 +1,135 @@
+"""Shared layers: norms, projections, embeddings, RoPE, sharding helpers."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pr
+
+
+# ----------------------------------------------------------------- sharding
+def shard(x: jnp.ndarray, names: Sequence[str | None], shd) -> jnp.ndarray:
+    """Logical-axis activation sharding constraint (no-op when shd is None)."""
+    if shd is None:
+        return x
+    return shd.constrain(x, names)
+
+
+# -------------------------------------------------------------------- norms
+def init_rmsnorm(key, d, dtype) -> dict:
+    del key
+    return {"scale": pr.ones((d,), ("norm",), dtype)}
+
+
+def rmsnorm(p, x, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(key, d, dtype) -> dict:
+    del key
+    return {"scale": pr.ones((d,), ("norm",), dtype),
+            "bias": pr.zeros((d,), ("norm",), dtype)}
+
+
+def layernorm(p, x, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# -------------------------------------------------------------- projections
+def init_dense(key, shape, axes, dtype, scale=None) -> pr.P:
+    return pr.normal(key, shape, axes, dtype, scale)
+
+
+def init_embedding(key, vocab, d, dtype) -> pr.P:
+    return pr.normal(key, (vocab, d), ("vocab", "embed"), dtype, scale=1.0)
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray,
+                 compute_dtype) -> jnp.ndarray:
+    """Token-id gather.  This is an irregular access through a runtime
+    array — the Intelligent-Unroll embedding hook (see core/) applies when
+    the lookup runs on an unsharded table; under pjit the table is
+    vocab-sharded and XLA emits the collective gather."""
+    return table[ids].astype(compute_dtype)
+
+
+def embed_lookup_psum(table: jnp.ndarray, ids: jnp.ndarray, compute_dtype,
+                      shd) -> jnp.ndarray:
+    """Decode-path embedding lookup over a vocab-sharded table.
+
+    GSPMD's default schedule for a sharded-table gather is an ALL-GATHER of
+    the whole table (hundreds of MB per decode step).  The Intelligent-
+    Unroll move — restructure the irregular access so the runtime-known
+    index structure becomes regular local compute — here means: every
+    model-shard gathers only its local vocab slice (masked) and the shards
+    psum the (B, S, D) result, which at decode is a few hundred KB.
+    Applied when the token count is tiny (decode); training keeps the
+    table all-gather (activations >> table there)."""
+    import functools
+    from jax.sharding import PartitionSpec as P
+    mesh = shd.mesh
+    model_n = mesh.shape["model"]
+    v, d = table.shape
+    if v % model_n or shd.rules.get("vocab") != "model":
+        return embed_lookup(table, ids, compute_dtype)
+    v_loc = v // model_n
+    table_spec = shd.spec(("vocab", "embed"), table.shape)
+    data_ax = shd.rules.get("embed")
+
+    def local(tab, idx):
+        m_idx = jax.lax.axis_index("model")
+        lo = m_idx * v_loc
+        rel = idx - lo
+        ok = (rel >= 0) & (rel < v_loc)
+        part = tab[jnp.clip(rel, 0, v_loc - 1)]
+        part = jnp.where(ok[..., None], part, 0).astype(compute_dtype)
+        return jax.lax.psum(part, "model")
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(table_spec, P()),
+        out_specs=P(None, None, data_ax),
+        check_vma=False)
+    return fn(table, ids)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                       # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x (B, S, H, D), positions (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- misc
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,443 @@
+"""Top-level language model: init / forward / prefill / decode for every
+assigned family (dense, moe, ssm/rwkv, hybrid/zamba2, encdec/whisper,
+vlm/paligemma).
+
+Layer stacks are scanned (`lax.scan` over params stacked on a leading
+"layers" axis) so HLO size and SPMD-partitioner cost stay flat in depth —
+required for the 512-device dry-run compiles.  Heterogeneous layer kinds
+(gemma3 5:1 local:global) go through ``lax.switch`` on a per-layer int.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import params as pr
+
+
+# ------------------------------------------------------------------ helpers
+def layer_kinds(cfg) -> np.ndarray:
+    """Per-layer kind flags. dense/moe/vlm: 1 = local(swa) layer."""
+    if cfg.attn_kind == "local_global":
+        r = cfg.local_global_ratio
+        return np.array([1 if (i % (r + 1)) < r else 0
+                         for i in range(cfg.num_layers)], np.int32)
+    if cfg.attn_kind == "swa":
+        return np.ones(cfg.num_layers, np.int32)
+    return np.zeros(cfg.num_layers, np.int32)
+
+
+def layer_runs(kinds: np.ndarray) -> list[tuple[int, int, int, int]]:
+    """Contiguous same-kind runs: (kind, layer_start, layer_stop,
+    position_of_start_within_its_kind_stack)."""
+    runs = []
+    counts = {0: 0, 1: 0}
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        k = int(kinds[i])
+        runs.append((k, i, j, counts[k]))
+        counts[k] += j - i
+        i = j
+    return runs
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _layer_init_for(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return B.init_dense_layer
+    if cfg.family == "ssm":
+        return B.init_rwkv_layer
+    if cfg.family == "hybrid":
+        return B.init_mamba_layer
+    if cfg.family == "encdec":
+        return B.init_decoder_layer
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------- init
+def init_model(key, cfg) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  cfg.param_dtype),
+        "final_norm": L.init_rmsnorm(ks[1], cfg.d_model, cfg.param_dtype),
+        "layers": pr.stack_init(_layer_init_for(cfg), ks[2],
+                                cfg.num_layers, cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = pr.normal(ks[3], (cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"), cfg.param_dtype)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        p["shared"] = B.init_shared_attn_block(ks[4], cfg)
+    if cfg.family == "encdec":
+        p["enc_layers"] = pr.stack_init(B.init_encoder_layer, ks[5],
+                                        cfg.enc_layers, cfg)
+        p["enc_norm"] = L.init_rmsnorm(ks[6], cfg.d_model, cfg.param_dtype)
+    return p
+
+
+# ------------------------------------------------------------------- stacks
+def _scan_stack(layers_p, x, body, xs_extra, cfg):
+    """Scan a stacked layer pytree over x. body(p_i, x, *xs_i) -> (x, aux)."""
+    def f(carry, inp):
+        x, aux = carry
+        p_i = inp[0]
+        x, aux_i = body(p_i, x, *inp[1:])
+        for k, v in aux_i.items():
+            aux[k] = aux.get(k, 0.0) + v
+        return (x, aux), None
+
+    f = _remat(f, cfg) if cfg.remat != "none" else f
+    (x, aux), _ = jax.lax.scan(f, (x, {"moe_aux_loss": jnp.float32(0),
+                                       "moe_dropped_frac": jnp.float32(0)}),
+                               (layers_p,) + xs_extra)
+    return x, aux
+
+
+def _scan_stack_cache(layers_p, caches, x, body, xs_extra, cfg):
+    """Decode scan: body(p_i, x, cache_i, *xs_i) -> (x, new_cache_i)."""
+    def f(x, inp):
+        p_i, cache_i = inp[0], inp[1]
+        x, new_cache = body(p_i, x, cache_i, *inp[2:])
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(f, x, (layers_p, caches) + xs_extra)
+    return x, new_caches
+
+
+# ------------------------------------------------------------------ forward
+def _embed_tokens(p, cfg, tokens, shd=None, decode=False):
+    if decode and shd is not None and cfg.decode_embed == "psum":
+        x = L.embed_lookup_psum(p["embed"], tokens, cfg.compute_dtype, shd)
+    else:
+        x = L.embed_lookup(p["embed"], tokens, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def _logits(p, cfg, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["embed"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, p["lm_head"].astype(x.dtype))
+
+
+def forward(p, cfg, batch, shd=None):
+    """Full-sequence forward -> (logits (B,S,V), aux dict).
+
+    batch: tokens (B,S) int32 [+ prefix_embeds (B,P,D) for vlm,
+    enc_frames (B,F,D) for encdec audio stub]."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_tokens(p, cfg, tokens)
+    prefix_len = 0
+
+    if cfg.family == "vlm":
+        prefix = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+        prefix_len = prefix.shape[1]
+        s = s + prefix_len
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.shard(x, ("batch", None, "embed_act"), shd)
+
+    aux = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        kinds = jnp.asarray(layer_kinds(cfg))
+
+        def body(p_i, x, kind_i):
+            branches = [
+                functools.partial(B.dense_layer, cfg=cfg, kind_flag=0,
+                                  positions=positions, shd=shd,
+                                  prefix_len=prefix_len),
+                functools.partial(B.dense_layer, cfg=cfg, kind_flag=1,
+                                  positions=positions, shd=shd,
+                                  prefix_len=prefix_len),
+            ]
+            if cfg.attn_kind in ("local_global",):
+                return jax.lax.switch(kind_i, branches, p_i, x)
+            return branches[int(cfg.attn_kind == "swa")](p_i, x)
+
+        x, aux = _scan_stack(p["layers"], x, body, (kinds,), cfg)
+
+    elif cfg.family == "ssm":
+        def body(p_i, x):
+            x, _ = B.rwkv_layer(p_i, x, cfg=cfg, shd=shd, state=None)
+            return x, {}
+        x, aux = _scan_stack(p["layers"], x, body, (), cfg)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.shared_attn_every
+        idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+
+        def body(p_i, x, idx):
+            x, _, _ = B.mamba_layer(p_i, x, cfg=cfg, shd=shd)
+            if k_every:
+                x = jax.lax.cond(
+                    (idx % k_every) == k_every - 1,
+                    lambda xx: B.shared_attn_block(p["shared"], xx, cfg=cfg,
+                                                   positions=positions,
+                                                   shd=shd),
+                    lambda xx: xx, x)
+            return x, {}
+        x, aux = _scan_stack(p["layers"], x, body, (idxs,), cfg)
+
+    elif cfg.family == "encdec":
+        enc = batch["enc_frames"].astype(cfg.compute_dtype)
+        f_len = enc.shape[1]
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(f_len, dtype=jnp.int32)[None], (b, f_len))
+
+        def enc_body(p_i, e):
+            return B.encoder_layer(p_i, e, cfg=cfg, positions=enc_pos,
+                                   shd=shd), {}
+        enc_out, _ = _scan_stack(p["enc_layers"], enc, enc_body, (), cfg)
+        enc_out = L.rmsnorm(p["enc_norm"], enc_out, cfg.norm_eps)
+
+        def body(p_i, x):
+            return B.decoder_layer(p_i, x, enc_out, cfg=cfg,
+                                   positions=positions, shd=shd), {}
+        x, aux = _scan_stack(p["layers"], x, body, (), cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]
+    logits = _logits(p, cfg, x)
+    logits = L.shard(logits, ("batch", None, "vocab"), shd)
+    return logits, aux
+
+
+# --------------------------------------------------------------------- loss
+def loss_fn(p, cfg, batch, shd=None, z_loss: float = 1e-4,
+            moe_loss_weight: float = 1e-2):
+    logits, aux = forward(p, cfg, batch, shd=shd)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=lg.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", lg, onehot)
+    nll = lse - ll
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    zl = z_loss * ((lse ** 2) * mask).sum() / denom
+    total = loss + zl
+    metrics = {"nll": loss, "z_loss": zl}
+    if "moe_aux_loss" in aux and cfg.family == "moe":
+        moe_l = moe_loss_weight * aux["moe_aux_loss"] / cfg.num_layers
+        total = total + moe_l
+        metrics["moe_aux"] = aux["moe_aux_loss"] / cfg.num_layers
+        metrics["moe_dropped"] = aux["moe_dropped_frac"] / cfg.num_layers
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg, batch_size: int, max_len: int, dtype=None) -> dict:
+    """Abstract-friendly cache pytree for decode."""
+    dtype = dtype or cfg.compute_dtype
+    l, kh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache = {}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        kinds = layer_kinds(cfg)
+        n_local = int((kinds == 1).sum())
+        n_global = l - n_local
+        if n_local:
+            # sliding-window layers hold a RING buffer of `window` slots —
+            # O(window) state regardless of context length (what makes
+            # long_500k decode feasible for gemma3/danube)
+            w = min(cfg.window, max_len)
+            cache["k_local"] = jnp.zeros((n_local, batch_size, w, kh, hd),
+                                         dtype)
+            cache["v_local"] = jnp.zeros((n_local, batch_size, w, kh, hd),
+                                         dtype)
+        if n_global:
+            cache["k"] = jnp.zeros((n_global, batch_size, max_len, kh, hd),
+                                   dtype)
+            cache["v"] = jnp.zeros((n_global, batch_size, max_len, kh, hd),
+                                   dtype)
+    if cfg.family == "encdec":
+        cache["cross_k"] = jnp.zeros((l, batch_size, cfg.enc_len, kh, hd),
+                                     dtype)
+        cache["cross_v"] = jnp.zeros((l, batch_size, cfg.enc_len, kh, hd),
+                                     dtype)
+    if cfg.family == "hybrid":
+        h, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        cache["ssm"] = jnp.zeros((l, batch_size, h, hp, n), jnp.float32)
+        cache["conv"] = jnp.zeros((l, batch_size, 2 + 1, conv_ch), dtype)
+        if cfg.shared_attn_every:
+            # the shared block's WEIGHTS are tied but each of its nseg
+            # applications has its own kv history
+            nseg = cfg.num_layers // cfg.shared_attn_every
+            cache["shared_k"] = jnp.zeros(
+                (nseg, batch_size, max_len, kh, hd), dtype)
+            cache["shared_v"] = jnp.zeros(
+                (nseg, batch_size, max_len, kh, hd), dtype)
+    if cfg.family == "ssm":
+        h, hk = cfg.rwkv_heads, cfg.rwkv_head_dim
+        cache["wkv"] = jnp.zeros((l, batch_size, h, hk, hk), jnp.float32)
+        cache["xlt"] = jnp.zeros((l, batch_size, cfg.d_model, ),
+                                 cfg.compute_dtype)
+        cache["xlc"] = jnp.zeros((l, batch_size, cfg.d_model, ),
+                                 cfg.compute_dtype)
+    return cache
+
+
+CACHE_AXES = {
+    "k": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "v": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "k_local": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "v_local": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "cross_k": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "cross_v": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "shared_k": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "shared_v": ("layers", "batch", None, "kv_heads", "head_dim"),
+    "ssm": ("layers", "batch", "heads", None, None),
+    "conv": ("layers", "batch", None, "mlp"),
+    "wkv": ("layers", "batch", "heads", None, None),
+    "xlt": ("layers", "batch", "embed_act"),
+    "xlc": ("layers", "batch", "embed_act"),
+}
+
+
+def cache_axes(cache: dict) -> dict:
+    """Logical axes for every cache leaf (sharding rules consume these)."""
+    return {k: CACHE_AXES[k] for k in cache}
+
+
+def decode_step(p, cfg, cache, tokens, cur_pos, shd=None,
+                prefix_len: int = 0):
+    """One token for every sequence. tokens (B, 1) int32; cur_pos scalar
+    int32 (current write position).  Returns (logits (B,1,V), new cache)."""
+    b = tokens.shape[0]
+    x = _embed_tokens(p, cfg, tokens, shd=shd, decode=True)
+    x = L.shard(x, ("batch", None, "embed_act"), shd)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        kinds = layer_kinds(cfg)
+
+        def body_for(kind_flag: int, ring: bool):
+            def body(p_i, x, cache_i):
+                return B.dense_layer_decode(
+                    p_i, x, cache_i, cfg=cfg, kind_flag=kind_flag,
+                    cur_pos=cur_pos, shd=shd, prefix_len=prefix_len,
+                    ring=ring)
+            return body
+
+        if cfg.attn_kind == "local_global":
+            # interleaved runs: local layers hit the ring stack, global
+            # layers the full stack (split caches, see init_cache)
+            new_cache = dict(cache)
+            for kind, l0, l1, k0 in layer_runs(kinds):
+                n = l1 - l0
+                seg_p = jax.tree.map(lambda a: a[l0:l1], p["layers"])
+                keys = ("k_local", "v_local") if kind == 1 else ("k", "v")
+                seg_c = {"k": new_cache[keys[0]][k0:k0 + n],
+                         "v": new_cache[keys[1]][k0:k0 + n]}
+                x, seg_new = _scan_stack_cache(
+                    seg_p, seg_c, x, body_for(kind, ring=(kind == 1)),
+                    (), cfg)
+                new_cache[keys[0]] = new_cache[keys[0]].at[k0:k0 + n].set(
+                    seg_new["k"])
+                new_cache[keys[1]] = new_cache[keys[1]].at[k0:k0 + n].set(
+                    seg_new["v"])
+            cache = new_cache
+        elif cfg.attn_kind == "swa":
+            kv = {"k": cache["k_local"], "v": cache["v_local"]}
+            x, new_kv = _scan_stack_cache(p["layers"], kv, x,
+                                          body_for(1, ring=True), (), cfg)
+            cache = dict(cache, k_local=new_kv["k"], v_local=new_kv["v"])
+        else:
+            kv = {"k": cache["k"], "v": cache["v"]}
+            x, new_kv = _scan_stack_cache(p["layers"], kv, x,
+                                          body_for(0, ring=False), (), cfg)
+            cache = dict(cache, **new_kv)
+
+    elif cfg.family == "ssm":
+        def body(p_i, x, cache_i):
+            x, (wkv, xlt, xlc) = B.rwkv_layer(
+                p_i, x, cfg=cfg, shd=shd,
+                state=(cache_i["wkv"], cache_i["xlt"], cache_i["xlc"]))
+            return x, {"wkv": wkv, "xlt": xlt, "xlc": xlc}
+        st = {"wkv": cache["wkv"], "xlt": cache["xlt"], "xlc": cache["xlc"]}
+        x, new_st = _scan_stack_cache(p["layers"], st, x, body, (), cfg)
+        cache = dict(cache, **new_st)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.shared_attn_every
+        idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        shared_box = {}
+
+        def body(p_i, x, cache_i, idx):
+            x, ssm, conv = B.mamba_layer(p_i, x, cfg=cfg, shd=shd,
+                                         state=cache_i["ssm"],
+                                         conv_state=cache_i["conv"])
+            return x, {"ssm": ssm, "conv": conv}
+
+        st = {"ssm": cache["ssm"], "conv": cache["conv"]}
+        # interleave scan segments with the shared attention block to keep
+        # the shared kv cache out of the scan (it is a single, non-stacked
+        # block); segments of k_every mamba layers run scanned.
+        if k_every:
+            seg = k_every
+            nseg = cfg.num_layers // seg
+            sk, sv = cache["shared_k"], cache["shared_v"]
+            for si in range(nseg):
+                sl = slice(si * seg, (si + 1) * seg)
+                seg_p = jax.tree.map(lambda a: a[sl], p["layers"])
+                seg_st = jax.tree.map(lambda a: a[sl], st)
+                x, seg_new = _scan_stack_cache(
+                    seg_p, seg_st, x, body, (idxs[sl],), cfg)
+                st = jax.tree.map(
+                    lambda full, new, sl=sl: full.at[sl].set(new), st, seg_new)
+                x, seg_cache = B.shared_attn_block_decode(
+                    p["shared"], x, {"k": sk[si], "v": sv[si]}, cfg=cfg,
+                    cur_pos=cur_pos, shd=shd)
+                sk = sk.at[si].set(seg_cache["k"])
+                sv = sv.at[si].set(seg_cache["v"])
+            cache = dict(cache, ssm=st["ssm"], conv=st["conv"],
+                         shared_k=sk, shared_v=sv)
+        else:
+            x, new_st = _scan_stack_cache(p["layers"], st, x, body,
+                                          (idxs,), cfg)
+            cache = dict(cache, **new_st)
+
+    elif cfg.family == "encdec":
+        def body(p_i, x, cache_i):
+            kv = {"k": cache_i["k"], "v": cache_i["v"]}
+            enc_kv = {"k": cache_i["cross_k"], "v": cache_i["cross_v"]}
+            x, new_kv = B.decoder_layer_decode(p_i, x, kv, enc_kv, cfg=cfg,
+                                               cur_pos=cur_pos, shd=shd)
+            return x, dict(cache_i, **new_kv)
+        st = {"k": cache["k"], "v": cache["v"],
+              "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        x, new_st = _scan_stack_cache(p["layers"], st, x, body, (), cfg)
+        cache = dict(cache, **new_st)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = _logits(p, cfg, x)
+    logits = L.shard(logits, ("batch", None, "vocab"), shd)
+    return logits, cache

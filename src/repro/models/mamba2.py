@@ -1,0 +1,152 @@
+"""Mamba2 (SSD) block — zamba2 backbone.
+
+Training/prefill uses the chunked SSD algorithm (Mamba2 paper, "state-space
+duality"): within-chunk quadratic attention-like term + inter-chunk state
+recurrence carried by ``lax.scan`` (chunk-sequential keeps the per-step
+working set at (B, H, Q, Q) instead of materializing every chunk at once).
+Decode is the single-token recurrence over the (B, H, P, N) state.
+
+The paper's technique does not apply inside this block (the scan is already
+a regular access pattern — DESIGN.md §Arch-applicability); it applies to
+the embedding gathers around it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as pr
+
+D_CONV = 4
+
+
+def init_mamba2(key, cfg) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = cfg.param_dtype
+    conv_ch = di + 2 * n                 # x, B, C go through the causal conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": pr.normal(ks[0], (d, 2 * di + 2 * n + h),
+                             ("embed", "mlp"), dt),
+        "conv_w": pr.normal(ks[1], (D_CONV, conv_ch), (None, "mlp"), dt,
+                            scale=0.5),
+        "conv_b": pr.zeros((conv_ch,), ("mlp",), dt),
+        "a_log": pr.const(jnp.zeros((h,), jnp.float32), ("heads",)),
+        "d_skip": pr.ones((h,), ("heads",), jnp.float32),
+        "dt_bias": pr.zeros((h,), ("heads",), jnp.float32),
+        "norm": {"scale": pr.ones((di,), ("norm",), dt)},
+        "out_proj": pr.normal(ks[5], (di, d), ("mlp", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, window D_CONV. x (B, S, C), w (D_CONV, C).
+    state (B, D_CONV-1, C) holds the trailing context for decode."""
+    if state is not None:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        s_out = x.shape[1]
+    else:
+        xp = jnp.pad(x, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+        s_out = x.shape[1]
+    # windowed sum via stacked slices (small static window)
+    out = jnp.zeros((x.shape[0], s_out, x.shape[2]), x.dtype)
+    for i in range(D_CONV):
+        out = out + xp[:, i:i + s_out, :] * w[i][None, None, :]
+    new_state = xp[:, -(D_CONV - 1):, :]
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def _split_proj(cfg, z_xbc_dt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di:di + di + 2 * n]
+    dt_raw = z_xbc_dt[..., di + di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _gated_norm(p, y, z, eps):
+    return L.rmsnorm(p, y * jax.nn.silu(z), eps)
+
+
+def mamba2_block(p, x, cfg, shd=None, state=None, conv_state=None):
+    """x (B, S, D).  state None => training/prefill (returns final state);
+    state (B, H, P, N) + conv_state => single-token decode (S == 1)."""
+    b, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    zxd = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, zxd)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xs = xbc[..., :di]
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    a = -jnp.exp(p["a_log"])                                    # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])          # (B,S,H)
+    xh = xs.reshape(b, s, h, hp)
+    xh = L.shard(xh, ("batch", None, "heads", None), shd)
+
+    if state is not None:   # ---- decode: single-step recurrence
+        da = jnp.exp(dt[:, 0, :] * a[None, :])                   # (B,H)
+        xbar = xh[:, 0] * dt[:, 0, :, None].astype(x.dtype)      # (B,H,P)
+        upd = jnp.einsum("bhp,bn->bhpn", xbar.astype(jnp.float32),
+                         b_in[:, 0].astype(jnp.float32))
+        new_state = state * da[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state,
+                       c_in[:, 0].astype(jnp.float32))
+        y = y + p["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        y = _gated_norm(p["norm"], y, z, cfg.norm_eps)
+        out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+        return out, new_state, new_conv
+
+    # ---- training/prefill: chunked SSD, scan over chunks
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    xc = xh.reshape(b, nc, q, h, hp)
+    bc = b_in.reshape(b, nc, q, n)
+    cc = c_in.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+
+    def chunk_step(carry, inp):
+        s_run = carry                                            # (B,H,P,N) f32
+        xq, bq, cq, dtq = inp                  # (B,Q,H,P) (B,Q,N) (B,Q,N) (B,Q,H)
+        da = dtq * a[None, None, :]                              # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)                             # (B,Q,H)
+        xbar = (xq.astype(jnp.float32)
+                * dtq[..., None].astype(jnp.float32))            # (B,Q,H,P)
+        # within-chunk quadratic term
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+        g_ts = jnp.einsum("btn,bsn->bts", cq.astype(jnp.float32),
+                          bq.astype(jnp.float32))                # (B,Q,Q)
+        m = g_ts[:, :, :, None] * decay * tri[None, :, :, None]
+        y_diag = jnp.einsum("btsh,bshp->bthp", m, xbar)
+        # inter-chunk contribution from the running state
+        y_off = jnp.einsum("btn,bhpn->bthp",
+                           cq.astype(jnp.float32), s_run) \
+            * jnp.exp(cum)[..., None]
+        # state update for next chunk
+        last = cum[:, -1:, :]                                    # (B,1,H)
+        w_in = jnp.exp(last - cum)                               # (B,Q,H)
+        s_new = s_run * jnp.exp(last[:, 0, :])[:, :, None, None] + \
+            jnp.einsum("bsh,bshp,bsn->bhpn", w_in, xbar,
+                       bq.astype(jnp.float32))
+        y = y_diag + y_off
+        return s_new, y
+
+    init = jnp.zeros((b, h, hp, n), jnp.float32) if state is None else state
+    xs_scan = (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3),
+               cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_step, init, xs_scan)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hp)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(p["norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    out = L.shard(out, ("batch", None, "embed_act"), shd)
+    return out, final_state, new_conv

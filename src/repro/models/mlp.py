@@ -1,0 +1,30 @@
+"""Gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import params as pr
+
+
+def init_mlp(key, cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": pr.normal(ks[0], (d, f), ("embed", "mlp"), dt),
+        "w_up": pr.normal(ks[1], (d, f), ("embed", "mlp"), dt),
+        "w_down": pr.normal(ks[2], (f, d), ("mlp", "embed"), dt),
+    }
+
+
+def mlp(p, x, cfg, shd=None) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.mlp_kind == "swiglu" else L.gelu
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = act(g) * u
+    h = L.shard(h, ("batch", None, "mlp"), shd)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return L.shard(out, ("batch", None, "embed_act"), shd)

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer (qwen3-moe, kimi-k2).
+
+Implementation: **group-local dropping dispatch**.  Tokens are split into
+groups of ~``moe_group_size``; each group sorts its (token, expert-choice)
+pairs by expert id (the Intelligent-Unroll Data Transfer step — after the
+sort the gather/scatter stream is piecewise contiguous, the paper's
+``L/S=1`` pattern), builds a capacity-bounded (E, C, D) dispatch buffer via
+a drop-mode scatter, runs the expert FFNs as dense einsums over the expert
+dim, and scatters results back weighted by the router gates.
+
+Sharding: groups -> data axes, experts -> "model".  Every scatter/gather is
+group-local, so under GSPMD the dispatch needs *no* cross-device data
+movement for tokens (each (data, model) shard computes its own (group,
+expert-block) slice); only the expert weights are expert-sharded.  The
+``alltoall`` variant (shard_map + explicit collective) is a §Perf
+hillclimb change, not the baseline.
+
+The routing arrays are runtime data; ``dispatch_pattern_stats`` runs the
+paper's feature-table analysis over them (benchmarks + the adaptive-
+capacity heuristic), and ``kernels/moe_dispatch`` executes the same plan as
+a Pallas row-gather on TPU for the single-device serving path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import params as pr
+
+
+def init_moe(key, cfg) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "router": pr.normal(ks[0], (d, e), ("embed", "router_experts"),
+                            jnp.float32),
+        "w_gate": pr.normal(ks[1], (e, d, f),
+                            ("experts", "embed", "expert_mlp"), dt),
+        "w_up": pr.normal(ks[2], (e, d, f),
+                          ("experts", "embed", "expert_mlp"), dt),
+        "w_down": pr.normal(ks[3], (e, f, d),
+                            ("experts", "expert_mlp", "embed"), dt),
+    }
+
+
+def _group_count(t: int, group_size: int) -> int:
+    g = max(1, t // max(group_size, 1))
+    while t % g:
+        g -= 1
+    return g
+
+
+def _dispatch_indices(eidx: jnp.ndarray, k: int, e: int, c: int):
+    """Group-local sort-based dispatch indices.
+
+    eidx (Tg, k) int32 -> (slot (Tg*k,), token (Tg*k,), order (Tg*k,)).
+    slot == e*c marks dropped entries (out-of-capacity) — used with
+    ``mode='drop'`` scatters/gathers.
+    """
+    tg = eidx.shape[0]
+    fe = eidx.reshape(-1)
+    order = jnp.argsort(fe)                       # Data Transfer: sort by expert
+    se = fe[order]
+    tok = (jnp.arange(tg * k, dtype=jnp.int32) // k)[order]
+    run_start = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tg * k, dtype=jnp.int32) - run_start.astype(jnp.int32)
+    valid = pos < c
+    slot = jnp.where(valid, se * c + pos, e * c)
+    return slot, tok, order, valid
+
+
+def moe(p, x, cfg, shd=None, group_size: int | None = None):
+    """x (B, S, D) -> (out (B, S, D), aux_metrics dict)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k, f = cfg.num_experts, cfg.top_k, cfg.moe_d_ff
+    g = _group_count(t, group_size or cfg.moe_group_size)
+    tg = t // g
+    c = max(1, int(np.ceil(tg * k / e * cfg.capacity_factor)))
+
+    xf = x.reshape(g, tg, d)
+    xf = L.shard(xf, ("batch", None, "embed_act"), shd)
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32),
+                        p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)          # (G, Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def one_group(xg, eg, gg):
+        slot, tok, order, valid = _dispatch_indices(eg, k, e, c)
+        disp = jnp.zeros((e * c + 1, d), xg.dtype).at[slot].set(
+            xg[tok], mode="drop")
+        return disp[:e * c].reshape(e, c, d), (slot, tok, order, valid)
+
+    disp, (slot, tok, order, valid) = jax.vmap(one_group)(xf, eidx, gates)
+    disp = L.shard(disp, ("batch", "experts", None, None), shd)
+
+    # expert FFN (dense over the expert dim, expert-sharded weights)
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", disp, wg)) * \
+        jnp.einsum("gecd,edf->gecf", disp, wu)
+    h = L.shard(h, ("batch", "experts", None, "expert_mlp"), shd)
+    out_e = jnp.einsum("gecf,efd->gecd", h, wd)
+    out_e = L.shard(out_e, ("batch", "experts", None, None), shd)
+
+    def combine(oe, gg, slot, tok, order, valid):
+        flat = oe.reshape(e * c, d)
+        vals = jnp.where(valid[:, None],
+                         flat.at[slot].get(mode="fill", fill_value=0.0), 0.0)
+        gsel = gg.reshape(-1)[order]
+        y = jnp.zeros((tg, d), x.dtype).at[tok].add(
+            vals * gsel[:, None].astype(x.dtype))
+        return y
+
+    y = jax.vmap(combine)(out_e, gates, slot, tok, order, valid)
+    y = y.reshape(b, s, d)
+    y = L.shard(y, ("batch", None, "embed_act"), shd)
+
+    # load-balance aux loss (Switch-style) + router stats
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0) / (t * k)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = {
+        "moe_aux_loss": e * jnp.sum(frac_tokens * mean_prob),
+        "moe_dropped_frac": 1.0 - valid.mean(),
+    }
+    return y, aux
+
+
+def dispatch_pattern_stats(eidx: np.ndarray, lane_width: int = 128) -> dict:
+    """Paper-style L/S opportunity analysis of a routing trace: classify the
+    *sorted* dispatch row-index stream with the feature table (Table 6 for
+    MoE dispatch)."""
+    from repro.core import feature_table as ft
+    fe = eidx.reshape(-1)
+    order = np.argsort(fe, kind="stable")
+    tok = (np.arange(fe.size) // eidx.shape[-1])[order]
+    blocks = ft.pad_to_blocks(tok.astype(np.int64), lane_width,
+                              fill=int(tok[-1]) if tok.size else 0)
+    gf = ft.gather_features(blocks, lane_width)
+    hist = {}
+    for v in gf.num_windows:
+        hist[int(v)] = hist.get(int(v), 0) + 1 / max(len(gf.num_windows), 1)
+    return {"ls_hist": hist,
+            "mean_windows": float(gf.num_windows.mean())}

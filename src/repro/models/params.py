@@ -1,0 +1,95 @@
+"""Parameter system: raw-JAX pytrees with logical sharding axes.
+
+Every parameter leaf is created as ``P(value, axes)`` where ``axes`` names
+one logical axis per array dimension (MaxText-style).  ``split_ptree``
+separates the value tree (what jit sees) from the static axes tree (what
+the sharding rules consume).  ``abstract_init`` runs an init function under
+``jax.eval_shape`` so full-size configs never allocate — the dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class P:
+    value: Any
+    axes: tuple[str | None, ...]
+
+    def __post_init__(self):
+        if hasattr(self.value, "ndim") and self.value.ndim != len(self.axes):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch for shape "
+                f"{getattr(self.value, 'shape', None)}")
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_ptree(ptree):
+    """P-tree -> (values pytree, axes pytree)."""
+    vals = jax.tree.map(lambda p: p.value, ptree, is_leaf=_is_p)
+    axes = jax.tree.map(lambda p: p.axes, ptree, is_leaf=_is_p)
+    return vals, axes
+
+
+def abstract_init(init_fn, *args):
+    """Shape-only init: returns (ShapeDtypeStruct tree, axes tree)."""
+    box = {}
+
+    def wrapped(key):
+        ptree = init_fn(key, *args)
+        vals, axes = split_ptree(ptree)
+        box["axes"] = axes
+        return vals
+
+    shapes = jax.eval_shape(wrapped, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def materialize_init(init_fn, key, *args):
+    """Real init: returns (values tree, axes tree)."""
+    ptree = init_fn(key, *args)
+    return split_ptree(ptree)
+
+
+def normal(key, shape, axes, dtype, scale=None) -> P:
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    scale = (1.0 / np.sqrt(fan_in)) if scale is None else scale
+    return P(jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype),
+             axes)
+
+
+def zeros(shape, axes, dtype) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, axes, dtype) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+def const(value, axes) -> P:
+    return P(value, axes)
+
+
+def stack_init(layer_init, key, n_layers: int, *args):
+    """vmap an init over the layer axis -> stacked (L, ...) P-tree with a
+    leading 'layers' logical axis (scanned by the backbone)."""
+    keys = jax.random.split(key, n_layers)
+
+    def one(k):
+        vals, _ = split_ptree(layer_init(k, *args))
+        return vals
+
+    stacked = jax.vmap(one)(keys)
+    # axes derived abstractly (no allocation) from a single-layer eval_shape
+    _, axes1 = abstract_init(layer_init, *args)
+    axes = jax.tree.map(lambda a: ("layers",) + tuple(a), axes1,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree.map(P, stacked, axes)

@@ -1,0 +1,170 @@
+"""Batched serving engine: prefill + decode over the family-specific cache.
+
+``prefill`` replays the training-forward layer bodies (one source of truth
+for the math) with ``return_kv=True`` so per-layer k/v (attention families)
+or final recurrence states (SSM/hybrid) land in the cache via scan ys.
+``decode_step`` (models/lm.py) is the jitted single-token step; the engine
+loops it for batched greedy/temperature generation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A  # noqa: F401 (re-export for tests)
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import lm
+
+
+def prefill(p, cfg, batch, max_len: int, shd=None):
+    """Run the prompt, returning (cache, last_logits)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = lm._embed_tokens(p, cfg, tokens)
+    prefix_len = 0
+    if cfg.family == "vlm":
+        prefix = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+        prefix_len = prefix.shape[1]
+        s += prefix_len
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    cache = lm.init_cache(cfg, b, max_len)
+    kinds = jnp.asarray(lm.layer_kinds(cfg))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            p_i, kind_i = inp
+            branches = [
+                functools.partial(B.dense_layer, cfg=cfg, kind_flag=kf,
+                                  positions=positions, shd=shd,
+                                  prefix_len=prefix_len, return_kv=True)
+                for kf in (0, 1)]
+            if cfg.attn_kind == "local_global":
+                x, _, kv = jax.lax.switch(kind_i, branches, p_i, x)
+            else:
+                x, _, kv = branches[int(cfg.attn_kind == "swa")](p_i, x)
+            return x, kv
+        x, (ks, vs) = jax.lax.scan(body, x, (p["layers"], kinds))
+        kind_np = lm.layer_kinds(cfg)
+        if "k" in cache:     # full-length stacks (global layers)
+            gidx = np.nonzero(kind_np == 0)[0]
+            cache["k"] = cache["k"].at[:, :, :s].set(
+                ks[gidx].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, :s].set(
+                vs[gidx].astype(cache["v"].dtype))
+        if "k_local" in cache:   # ring stacks (sliding-window layers)
+            lidx = np.nonzero(kind_np == 1)[0]
+            w = cache["k_local"].shape[2]
+            slot_pos = (s - 1) - ((s - 1 - np.arange(w)) % w)
+            valid = slot_pos >= 0
+            take = np.where(valid, slot_pos, 0)
+            kl = ks[lidx][:, :, take] * valid[None, None, :, None, None]
+            vl = vs[lidx][:, :, take] * valid[None, None, :, None, None]
+            cache["k_local"] = kl.astype(cache["k_local"].dtype)
+            cache["v_local"] = vl.astype(cache["v_local"].dtype)
+
+    elif cfg.family == "encdec":
+        enc = batch["enc_frames"].astype(cfg.compute_dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32)[None],
+            (b, enc.shape[1]))
+
+        def enc_body(e, p_i):
+            return B.encoder_layer(p_i, e, cfg=cfg, positions=enc_pos,
+                                   shd=shd), None
+        enc_out, _ = jax.lax.scan(enc_body, enc, p["enc_layers"])
+        enc_out = L.rmsnorm(p["enc_norm"], enc_out, cfg.norm_eps)
+
+        def body(x, p_i):
+            x, kv = B.decoder_layer(p_i, x, enc_out, cfg=cfg,
+                                    positions=positions, shd=shd,
+                                    return_kv=True)
+            return x, kv
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, p["layers"])
+        cache["k"] = cache["k"].at[:, :, :s].set(ks.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :s].set(vs.astype(cache["v"].dtype))
+        cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+
+    elif cfg.family == "ssm":
+        def body(x, p_i):
+            x2, st = B.rwkv_layer(p_i, x, cfg=cfg, shd=shd, state=None)
+            return x2, st
+        x, (wkv, xlt, xlc) = jax.lax.scan(body, x, p["layers"])
+        cache.update(wkv=wkv, xlt=xlt, xlc=xlc)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.shared_attn_every
+        idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def body(x, inp):
+            p_i, idx = inp
+            x, ssm, conv = B.mamba_layer(p_i, x, cfg=cfg, shd=shd)
+            kv = (jnp.zeros((b, s, kh, hd), cfg.compute_dtype),) * 2
+            if k_every:
+                def at_shared(xx):
+                    x2, (k, v) = B.shared_attn_block(
+                        p["shared"], xx, cfg=cfg, positions=positions,
+                        shd=shd, return_kv=True)
+                    return x2, (k.astype(kv[0].dtype),
+                                v.astype(kv[1].dtype))
+                x, kv = jax.lax.cond(
+                    (idx % k_every) == k_every - 1, at_shared,
+                    lambda xx: (xx, kv), x)
+            return x, (ssm, conv, kv)
+
+        x, (ssm, conv, (ks_all, vs_all)) = jax.lax.scan(
+            body, x, (p["layers"], idxs))
+        cache.update(ssm=ssm, conv=conv)
+        if k_every:
+            # one kv history per shared-block application (weights tied,
+            # caches independent): gather the shared layers' ys
+            shared_idx = jnp.arange(k_every - 1, cfg.num_layers, k_every)
+            cache["shared_k"] = cache["shared_k"].at[:, :, :s].set(
+                ks_all[shared_idx].astype(cache["shared_k"].dtype))
+            cache["shared_v"] = cache["shared_v"].at[:, :, :s].set(
+                vs_all[shared_idx].astype(cache["shared_v"].dtype))
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, prefix_len:]
+    logits = lm._logits(p, cfg, x[:, -1:, :])
+    return cache, logits
+
+
+def generate(p, cfg, batch, steps: int, max_len: int, shd=None,
+             temperature: float = 0.0, key=None):
+    """Batched generation. Returns (tokens (B, steps), final cache)."""
+    b, s = batch["tokens"].shape
+    prefix_len = cfg.num_prefix if cfg.family == "vlm" else 0
+    prefill_j = jax.jit(functools.partial(prefill, cfg=cfg, shd=shd,
+                                          max_len=max_len))
+    cache, last_logits = prefill_j(p, batch=batch)
+    decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg, shd=shd,
+                                       prefix_len=prefix_len))
+
+    def sample(logits, key):
+        if temperature == 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1, :] / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = sample(last_logits, key)
+    out = [tok]
+    pos0 = s + prefix_len
+    for i in range(steps - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(p, cache=cache, tokens=tok[:, None],
+                               cur_pos=jnp.int32(pos0 + i))
+        tok = sample(logits, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1), cache

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests (assignment deliverable): reduced config of
+the same family, one forward + one train step on CPU, assert output shapes
+and absence of NaNs.  Full configs are exercised only via the dry-run."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import lm, params as pr
+from repro.optim import adamw
+
+
+def _batch(cfg, key, b, s):
+    t = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"tokens": t[:, :-1], "labels": t[:, 1:],
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (b, cfg.num_prefix, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(
+            key, (b, cfg.enc_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    full = get_config(arch)
+    cfg = full.reduced()
+    # the reduced config must stay in-family
+    assert cfg.family == full.family
+    key = jax.random.PRNGKey(0)
+    vals, axes = pr.materialize_init(lm.init_model, key, cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, key, b, s)
+
+    logits, _ = jax.jit(lambda p, bt: lm.forward(p, cfg, bt))(vals, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    opt_state = adamw.init(vals, opt_cfg)
+
+    def step(p, o, bt):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: lm.loss_fn(pp, cfg, bt), has_aux=True)(p)
+        new_p, new_o, _ = adamw.update(p, g, o, opt_cfg)
+        return new_p, new_o, l
+
+    new_vals, _, loss = jax.jit(step)(vals, opt_state, batch)
+    assert np.isfinite(float(loss)), arch
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(vals),
+                                jax.tree.leaves(new_vals)))
+    assert delta > 0, arch
+    for leaf in jax.tree.leaves(new_vals):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Pin the exact published numbers (guards accidental edits)."""
+    want = {
+        "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+        "granite_3_2b": (40, 2048, 32, 8, 8192, 49155),
+        "gemma3_27b": (62, 5376, 32, 16, 21504, 262144),
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "h2o_danube_3_4b": (24, 3840, 32, 8, 10240, 32000),
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+        "kimi_k2_1t_a32b": (61, 7168, 64, 8, 2048, 163840),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "rwkv6_3b": (32, 2560, 40, 40, 8960, 65536),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == want
+    if arch == "zamba2_1p2b":
+        assert cfg.ssm_state == 64 and cfg.family == "hybrid"
+    if arch == "qwen3_moe_235b_a22b":
+        assert (cfg.num_experts, cfg.top_k) == (128, 8)
+    if arch == "kimi_k2_1t_a32b":
+        assert (cfg.num_experts, cfg.top_k) == (384, 8)
+    if arch == "gemma3_27b":
+        assert cfg.attn_kind == "local_global" and cfg.local_global_ratio == 5
+    if arch == "paligemma_3b":
+        assert cfg.num_prefix == 256 and cfg.family == "vlm"
+    if arch == "whisper_small":
+        assert cfg.enc_layers == 12 and cfg.family == "encdec"
+    if arch == "rwkv6_3b":
+        assert cfg.family == "ssm" and cfg.rwkv

@@ -1,0 +1,202 @@
+"""Core engine tests: plan invariants (hypothesis) + end-to-end oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import feature_table as ft
+from repro.core.plan import build_plan, CostModel, GATHER_FALLBACK
+from repro.core.seed import spmv_seed, pagerank_seed, reference_execute
+from repro.core import engine as eng
+from repro.core.apps import SpMV, PageRank, pagerank_reference
+from repro.sparse import generators as G
+
+
+# ---------------------------------------------------------------- hypothesis
+@given(
+    nnz=st.integers(1, 400),
+    out_len=st.integers(1, 64),
+    data_len=st.integers(1, 300),
+    lane=st.sampled_from([8, 16, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_executes_exact_semantics(nnz, out_len, data_len, lane, seed_int):
+    """Property: for ANY access arrays, the specialized plan reproduces the
+    scatter-add oracle (the paper's §5 legality argument, checked)."""
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    x = rng.standard_normal(data_len).astype(np.float32)
+
+    sp = SpMV.from_coo(rows, cols, vals, (out_len, data_len),
+                       lane_width=lane)
+    y = np.asarray(sp.matvec(jnp.asarray(x)))
+    yref = np.zeros(out_len, np.float64)
+    np.add.at(yref, rows, vals.astype(np.float64) * x[cols].astype(np.float64))
+    np.testing.assert_allclose(y, yref, rtol=5e-4, atol=5e-5)
+
+
+@given(
+    nnz=st.integers(1, 300),
+    lane=st.sampled_from([8, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_gather_features_are_a_valid_cover(nnz, lane, seed_int):
+    """Property: window_ids/slot/offset reconstruct the original indices."""
+    rng = np.random.default_rng(seed_int)
+    idx = rng.integers(0, 1000, nnz)
+    blocks = ft.pad_to_blocks(idx, lane, fill=int(idx[-1]))
+    gf = ft.gather_features(blocks, lane)
+    rebuilt = (gf.window_ids[np.arange(blocks.shape[0])[:, None],
+                             gf.lane_slot] * lane + gf.lane_offset)
+    np.testing.assert_array_equal(rebuilt, blocks)
+    # ls_flag == distinct aligned windows per block
+    want = [len(np.unique(b // lane)) for b in blocks]
+    np.testing.assert_array_equal(gf.num_windows, want)
+
+
+@given(
+    nnz=st.integers(1, 300),
+    out_len=st.integers(1, 40),
+    lane=st.sampled_from([8, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_reduce_features_invariants(nnz, out_len, lane, seed_int):
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    blocks = ft.pad_to_blocks(rows.astype(np.int64), lane, fill=-1)
+    rf = ft.reduce_features(blocks, lane)
+    b = blocks.shape[0]
+    for bi in range(b):
+        srt = np.sort(blocks[bi])
+        np.testing.assert_array_equal(rf.write_sorted[bi], srt)
+        valid = srt != -1
+        # heads = one per distinct valid value
+        assert rf.num_heads[bi] == len(np.unique(srt[valid]))
+        # op_flag covers the longest run
+        if valid.any():
+            runs = np.unique(srt[valid], return_counts=True)[1]
+            need = int(np.ceil(np.log2(runs.max()))) if runs.max() > 1 else 0
+            flag = rf.op_flag[bi]
+            assert flag == ft.FULL_REDUCE or flag >= need
+            if flag == ft.FULL_REDUCE:
+                assert len(runs) == 1 and valid.all()
+
+
+@given(seed_int=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pattern_hash_consistency(seed_int):
+    """Identical blocks hash identically; hash ignores per-block operands
+    (window ids) but captures the lane pattern."""
+    rng = np.random.default_rng(seed_int)
+    lane = 8
+    idx = np.tile(rng.integers(0, 64, lane), 4)       # 4 identical blocks
+    rows = np.tile(rng.integers(0, 8, lane), 4)
+    gf = ft.gather_features(idx.reshape(4, lane), lane)
+    rf = ft.reduce_features(rows.reshape(4, lane).astype(np.int64), lane)
+    h = ft.pattern_hashes(gf, rf)
+    assert len(set(h.tolist())) == 1
+    assert ft.dedup_ratio(h) == pytest.approx(0.75)
+
+
+# ------------------------------------------------------------------- oracles
+@pytest.mark.parametrize("gen", ["dense", "banded", "random", "powerlaw",
+                                 "blockdiag", "qcd"])
+@pytest.mark.parametrize("lane", [8, 128])
+def test_spmv_families(gen, lane):
+    m = {"dense": G.dense(64), "banded": G.banded(512, 5),
+         "random": G.random_uniform(512, 5), "powerlaw": G.power_law(512, 6),
+         "blockdiag": G.block_diag(256, 16), "qcd": G.stencil_qcd(16)}[gen]
+    sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=lane)
+    x = np.random.default_rng(1).standard_normal(m.shape[1]).astype(np.float32)
+    y = np.asarray(sp.matvec(jnp.asarray(x)))
+    yref = np.zeros(m.shape[0], np.float64)
+    np.add.at(yref, np.asarray(m.rows),
+              np.asarray(m.vals, np.float64) * x[np.asarray(m.cols)])
+    np.testing.assert_allclose(y, yref, rtol=1e-4, atol=1e-5)
+
+
+def test_dense_is_perfect_case():
+    """Paper Table 6: Dense dataset -> 100% L/S=1, Op=hardware-reduction."""
+    m = G.dense(128)
+    sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=128)
+    st_ = sp.plan.stats
+    assert st_.ls_hist.get(1, 0) == pytest.approx(1.0)
+    assert st_.op_hist.get(ft.FULL_REDUCE, 0) == pytest.approx(1.0)
+    assert st_.replaced_gather_frac == 1.0
+    # every class is a stream class (identity permutation)
+    assert all(c.stream for c in sp.plan.classes)
+
+
+def test_pagerank_matches_reference():
+    src, dst, n = G.graph_edges("powerlaw", 768, 7)
+    pr = PageRank.from_edges(src, dst, n, lane_width=32)
+    r = np.asarray(pr.run(iters=12))
+    rr = pagerank_reference(src, dst, n, iters=12)
+    np.testing.assert_allclose(r, rr, rtol=2e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("reduce", ["max", "min", "mul"])
+def test_other_reduce_ops(reduce):
+    """§5.2: reduction operators beyond add."""
+    from repro.core.seed import CodeSeed
+    rng = np.random.default_rng(3)
+    nnz, out_len, data_len = 500, 37, 200
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    x = (rng.standard_normal(data_len).astype(np.float32) ** 2) + 0.5
+    seed = CodeSeed(name="t", output="y", out_index="row",
+                    gather_index="col", gathered=("x",), elementwise=(),
+                    combine=lambda v: v["x"], reduce=reduce)
+    plan = build_plan(seed, {"row": rows, "col": cols}, out_len, data_len,
+                      CostModel(lane_width=16))
+    run = eng.make_executor(plan, {}, backend="jax")
+    init = jnp.full((out_len,), seed.reduce_identity, jnp.float32)
+    y = np.asarray(run({"x": jnp.asarray(x)}, init))
+    ref = np.asarray(reference_execute(
+        seed, {"row": rows, "col": cols}, {"x": x},
+        jnp.full((out_len,), seed.reduce_identity, jnp.float32)))
+    np.testing.assert_allclose(y, ref, rtol=1e-4)
+
+
+def test_pallas_backend_matches_jax_backend():
+    m = G.power_law(512, 6)
+    x = np.random.default_rng(2).standard_normal(m.shape[1]).astype(np.float32)
+    ys = []
+    for backend in ("jax", "pallas"):
+        sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                           np.asarray(m.vals), m.shape, lane_width=32,
+                           backend=backend)
+        ys.append(np.asarray(sp.matvec(jnp.asarray(x))))
+    np.testing.assert_allclose(ys[0], ys[1], rtol=1e-5, atol=1e-6)
+
+
+def test_cost_model_cutoff_forces_fallback():
+    m = G.random_uniform(512, 5)
+    sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=8,
+                       cost=CostModel(lane_width=8, max_windows_replace=1))
+    assert any(c.ls_flag == GATHER_FALLBACK for c in sp.plan.classes)
+    x = np.random.default_rng(1).standard_normal(m.shape[1]).astype(np.float32)
+    y = np.asarray(sp.matvec(jnp.asarray(x)))
+    yref = np.zeros(m.shape[0], np.float64)
+    np.add.at(yref, np.asarray(m.rows),
+              np.asarray(m.vals, np.float64) * x[np.asarray(m.cols)])
+    np.testing.assert_allclose(y, yref, rtol=1e-4, atol=1e-5)
+
+
+def test_empty_and_single_element():
+    for nnz in (1, 3):
+        rows = np.zeros(nnz, dtype=np.int64)
+        cols = np.arange(nnz)
+        vals = np.ones(nnz, np.float32)
+        sp = SpMV.from_coo(rows, cols, vals, (4, 8), lane_width=8)
+        y = np.asarray(sp.matvec(jnp.ones(8, jnp.float32)))
+        assert y[0] == pytest.approx(nnz)
+        assert (y[1:] == 0).all()

@@ -1,0 +1,67 @@
+"""Dry-run infrastructure tests: HLO static analyzer correctness + one
+real production-mesh cell lowered/compiled in a subprocess (512 host
+devices, which must not leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_analyzer_counts_scan_trip_counts():
+    def scanned(length):
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            return jax.lax.scan(body, x, None, length=length)[0]
+        return f
+    x = jnp.ones((64, 64), jnp.float32)
+    base = 2 * 64 ** 3
+    for length in (1, 5, 23):
+        txt = jax.jit(scanned(length)).lower(x).compile().as_text()
+        a = analyze_hlo(txt)
+        assert a["flops"] == pytest.approx(length * base, rel=1e-6), length
+
+
+def test_analyzer_attention_einsum_flops():
+    def attn(q, k):
+        return jnp.einsum("bshd,bthd->bhst", q, k)
+    q = jnp.ones((2, 128, 4, 32), jnp.float32)
+    txt = jax.jit(attn).lower(q, q).compile().as_text()
+    a = analyze_hlo(txt)
+    assert a["flops"] == pytest.approx(2 * 2 * 4 * 128 * 128 * 32, rel=1e-6)
+
+
+def test_analyzer_memory_counts_matmul_traffic():
+    def mm(x, w):
+        return x @ w
+    x = jnp.ones((64, 64), jnp.float32)
+    txt = jax.jit(mm).lower(x, x).compile().as_text()
+    a = analyze_hlo(txt)
+    assert a["memory_bytes"] >= 3 * 64 * 64 * 4
+
+
+@pytest.mark.slow
+def test_production_mesh_cell_compiles(tmp_path):
+    """End-to-end: one (arch, shape, mesh) cell on the 16x16 production
+    mesh in a subprocess (fresh XLA_FLAGS)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-small", "--shape", "decode_32k",
+         "--mesh", "pod", "--out", str(tmp_path), "--force"],
+        env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(
+        tmp_path / "whisper-small__decode_32k__pod.json"))
+    assert rec["status"] == "ok", rec
+    assert rec["devices"] == 256
+    assert rec["analysis"]["flops"] > 0
+    # this process must still see its single CPU device
+    assert len(jax.devices()) == 1

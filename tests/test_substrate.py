@@ -1,0 +1,221 @@
+"""Substrate tests: optimizer, checkpoint (atomic/elastic), train loop
+(loss decreases, resume-exact, preemption, stragglers), data determinism,
+MoE unit behaviour, chunked-recurrence invariance, grad compression."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.checkpoint import checkpoint as ck
+from repro.data.pipeline import synth_batch
+from repro.models import lm, moe as MOE, params as pr
+from repro.models import mamba2 as M2
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, Trainer
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_matches_reference_step():
+    cfg = adamw.AdamWConfig(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8,
+                            weight_decay=0.0, clip_norm=1e9,
+                            warmup_steps=0, total_steps=10, min_lr_frac=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = adamw.init(p, cfg)
+    new_p, st, _ = adamw.update(p, g, st, cfg)
+    # hand-computed first adam step: delta = lr * g/|g| elementwise signs
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    want = np.asarray(p["w"]) - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+
+
+def test_adamw_quantized_moments_track_full():
+    cfg_f = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=50,
+                              clip_norm=1e9, weight_decay=0.0)
+    cfg_q = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=50,
+                              clip_norm=1e9, weight_decay=0.0,
+                              quantize_moments=True, q_block=64)
+    rng = np.random.default_rng(0)
+    p0 = {"w": jnp.asarray(rng.standard_normal(512), jnp.float32)}
+    pf, pq = p0, p0
+    sf, sq = adamw.init(pf, cfg_f), adamw.init(pq, cfg_q)
+    for i in range(10):
+        g = {"w": jnp.asarray(rng.standard_normal(512) * 0.1, jnp.float32)}
+        pf, sf, _ = adamw.update(pf, g, sf, cfg_f)
+        pq, sq, _ = adamw.update(pq, g, sq, cfg_q)
+    rel = float(jnp.linalg.norm(pf["w"] - pq["w"]) /
+                jnp.linalg.norm(pf["w"]))
+    assert rel < 0.05, rel   # 8-bit moments stay close to f32 moments
+    assert sq["m"]["w"]["q"].dtype == jnp.int8
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
+                  "d": jnp.asarray([1.5], jnp.bfloat16)}}
+    for step in (10, 20, 30, 40):
+        ck.save(d, step, tree, keep=2)
+    assert ck.latest_step(d) == 40
+    names = sorted(os.listdir(d))
+    assert names == ["step_00000030", "step_00000040"]   # keep-2 GC
+    back = ck.restore(d, 40, tree)
+    for k, v in ck._flatten(tree).items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(ck._flatten(back)[k]))
+
+
+def test_checkpoint_elastic_restore_reshards(tmp_path):
+    """Restore onto a different sharding layout (elastic scaling)."""
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from repro.launch.mesh import make_local_mesh
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ck.save(d, 1, tree)
+    mesh = make_local_mesh(data=1, model=1)
+    sh = {"w": NamedSharding(mesh, PS("data", None))}
+    back = ck.restore(d, 1, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+    assert back["w"].sharding == sh["w"]
+
+
+# --------------------------------------------------------------- train loop
+def test_train_loss_decreases_and_resume_exact(tmp_path):
+    cfg = get_config("granite_3_2b").reduced().replace(num_layers=2)
+    tc = TrainConfig(steps=30, batch=4, seq=32, ckpt_every=15,
+                     ckpt_dir=str(tmp_path), log_every=100,
+                     async_ckpt=False,
+                     opt=adamw.AdamWConfig(lr=3e-3, warmup_steps=5,
+                                           total_steps=30))
+    out = Trainer(cfg, tc).run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert losses[-1] < losses[0] * 0.9, losses  # learning happens
+    # ---- kill-and-resume: a fresh Trainer picks up from step 30's ckpt? no,
+    # run to 30 then extend to 35 and verify resume starts at 30
+    tc2 = TrainConfig(**{**tc.__dict__, "steps": 35})
+    out2 = Trainer(cfg, tc2).run()
+    assert out2["metrics"][0]["step"] == 30   # resumed, not restarted
+
+    # determinism: same data at a given step regardless of resume
+    b1 = synth_batch(cfg, 4, 32, step=33)
+    b2 = synth_batch(cfg, 4, 32, step=33)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_train_preemption_checkpoints(tmp_path):
+    cfg = get_config("granite_3_2b").reduced().replace(num_layers=1)
+    tc = TrainConfig(steps=100, batch=2, seq=16, ckpt_every=1000,
+                     ckpt_dir=str(tmp_path), log_every=1000,
+                     async_ckpt=False)
+    tr = Trainer(cfg, tc)
+    # simulate SIGTERM after construction: set the flag mid-run via monkeypatch
+    orig = tr._install_signal_handlers
+
+    def install():
+        orig()
+        tr._preempted = True   # preempt immediately after step 0
+    tr._install_signal_handlers = install
+    out = tr.run()
+    assert ck.latest_step(str(tmp_path)) is not None
+    assert len(out["metrics"]) < 100
+
+
+# --------------------------------------------------------------------- data
+def test_data_pipeline_deterministic_and_shifted():
+    cfg = get_config("granite_3_2b").reduced()
+    b = synth_batch(cfg, 3, 24, step=7, seed=5)
+    b2 = synth_batch(cfg, 3, 24, step=7, seed=5)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------- moe
+def test_moe_matches_dense_reference_dropless():
+    """Dropless MoE == per-token dense expert evaluation."""
+    cfg = get_config("qwen3_moe_235b_a22b").reduced().replace(
+        capacity_factor=8.0)   # dropless for E=8,k=2
+    key = jax.random.PRNGKey(0)
+    p, _ = pr.split_ptree(MOE.init_moe(key, cfg))
+    x = jax.random.normal(key, (2, 8, cfg.d_model), jnp.float32)
+    y, aux = MOE.moe(p, x, cfg)
+    # reference: full dense routing
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, eidx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        acc = 0
+        for j in range(cfg.top_k):
+            e = int(eidx[t, j])
+            h = jax.nn.silu(xf[t] @ p["w_gate"][e]) * (xf[t] @ p["w_up"][e])
+            acc = acc + float(gates[t, j]) * (h @ p["w_down"][e])
+        out[t] = acc
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, cfg.d_model), out,
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux["moe_dropped_frac"]) == 0.0
+
+
+def test_moe_dispatch_pattern_stats():
+    rng = np.random.default_rng(0)
+    eidx = rng.integers(0, 8, size=(512, 2))
+    st = MOE.dispatch_pattern_stats(eidx, lane_width=32)
+    assert abs(sum(st["ls_hist"].values()) - 1.0) < 1e-6
+    assert st["mean_windows"] >= 1.0
+
+
+# ------------------------------------------------------- chunked recurrences
+def test_mamba2_chunk_invariance():
+    cfg = get_config("zamba2_1p2b").reduced()
+    key = jax.random.PRNGKey(0)
+    p, _ = pr.split_ptree(M2.init_mamba2(key, cfg))
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32) * 0.3
+    outs = []
+    for chunk in (4, 8, 16):
+        c = cfg.replace(ssm_chunk=chunk)
+        y, st, _ = M2.mamba2_block(p, x, c)
+        outs.append(np.asarray(y, np.float32))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-5)
+
+
+def test_rwkv6_chunk_invariance():
+    from repro.models import rwkv6 as R6
+    cfg = get_config("rwkv6_3b").reduced()
+    key = jax.random.PRNGKey(0)
+    p, _ = pr.split_ptree(R6.init_rwkv6(key, cfg))
+    x = jax.random.normal(key, (2, 24, cfg.d_model), jnp.float32) * 0.3
+    y1, _ = R6.rwkv6_time_mix(p, x, cfg, chunk=4)
+    y2, _ = R6.rwkv6_time_mix(p, x, cfg, chunk=12)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------- compression
+def test_grad_compression_error_feedback_converges():
+    """Compressed mean + error feedback ~ true mean over steps."""
+    from repro.optim.compress import _q8, _dq8
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(1024).astype(np.float32)
+    err = np.zeros_like(g)
+    acc_true, acc_sent = np.zeros_like(g), np.zeros_like(g)
+    for _ in range(50):
+        gi = g + rng.standard_normal(1024).astype(np.float32) * 0.01
+        x = gi + err
+        q, s, _ = _q8(jnp.asarray(x))
+        sent = np.asarray(_dq8(q, s, x.shape, x.size))
+        err = x - sent
+        acc_true += gi
+        acc_sent += sent
+    rel = np.linalg.norm(acc_true - acc_sent) / np.linalg.norm(acc_true)
+    assert rel < 0.01, rel   # error feedback keeps the *sum* unbiased
