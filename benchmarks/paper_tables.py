@@ -173,6 +173,117 @@ def bench_table8(scale="small", pallas: bool = False) -> list[tuple]:
     return out
 
 
+# ----------------------------------------- fused vs per-class (this repo)
+def bench_spmv_exec(scale="small", lane: int = 128,
+                    iters: int = 50) -> list[dict]:
+    """backend x dataset x {per_class, fused} SpMV timings — the perf
+    trajectory record for the fused single-launch executor."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for m in corpus(scale):
+        t0 = time.perf_counter()
+        plan = build_plan(spmv_seed(),
+                          {"row": np.asarray(m.rows),
+                           "col": np.asarray(m.cols)},
+                          m.shape[0], m.shape[1],
+                          CostModel(lane_width=lane))
+        build_s = time.perf_counter() - t0
+        x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+        y0 = jnp.zeros(m.shape[0], jnp.float32)
+        runs = {mode: eng.make_executor(plan, {"value": np.asarray(m.vals)},
+                                        backend="jax", fused=fused)
+                for mode, fused in (("per_class", False), ("fused", True))}
+        # interleaved min-of-rounds: the two modes share any clock drift
+        times = {mode: float("inf") for mode in runs}
+        for mode, run in runs.items():          # warmup + compile
+            jax.block_until_ready(run({"x": x}, y0))
+        for _ in range(3):
+            for mode, run in runs.items():
+                times[mode] = min(times[mode],
+                                  timeit(run, {"x": x}, y0, warmup=1,
+                                         iters=iters))
+        for mode, t in times.items():
+            rows.append({
+                "bench": "spmv_exec", "dataset": m.name, "nnz": m.nnz,
+                "lane_width": lane, "backend": "jax", "mode": mode,
+                "us_per_call": round(t, 2),
+                "num_classes": plan.stats.num_classes,
+                "num_fused_launches": len(eng.fused_xla_classes(plan)),
+                "speedup_vs_per_class":
+                    round(times["per_class"] / t, 3),
+                "plan_build_s": round(build_s, 4),
+            })
+    return rows
+
+
+def bench_plan_build(nnz: int = 1_000_000, out_len: int = 100_000,
+                     lanes=(8, 128)) -> list[dict]:
+    """Plan-build trajectory on a 1M-nnz synthetic: the per-block blake2b
+    hash loop it replaced, the vectorized build, and the warm
+    content-addressed cache hit."""
+    from repro.core import feature_table as ft
+    rng = np.random.default_rng(0)
+    r = np.sort(rng.integers(0, out_len, nnz))
+    c = rng.integers(0, out_len, nnz)
+    rows = []
+    for lane in lanes:
+        cost = CostModel(lane_width=lane)
+        t0 = time.perf_counter()
+        build_plan(spmv_seed(), {"row": r, "col": c}, out_len, out_len,
+                   cost)
+        build_s = time.perf_counter() - t0
+        gf = ft.gather_features(ft.pad_to_blocks(c, lane, fill=0), lane)
+        rf = ft.reduce_features(
+            ft.pad_to_blocks(r.astype(np.int64), lane, fill=-1), lane)
+        t0 = time.perf_counter()
+        ft.pattern_hashes(gf, rf)
+        hash_vec_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ft.pattern_hashes_blake2b(gf, rf)
+        hash_blake_s = time.perf_counter() - t0
+        # the seed's other per-block Python loops: zip/dict class binning
+        # and the histogram accumulation (replaced by np.unique)
+        t0 = time.perf_counter()
+        b = gf.num_windows.shape[0]
+        keys = list(zip(np.zeros(b, np.int32).tolist(),
+                        rf.op_flag.tolist(), np.zeros(b, bool).tolist()))
+        uniq = sorted(set(keys))
+        key_to_cid = {k: i for i, k in enumerate(uniq)}
+        np.array([key_to_cid[k] for k in keys], dtype=np.int32)
+        h1, h2, frac = {}, {}, 1.0 / b
+        for v in gf.num_windows:
+            h1[int(v)] = h1.get(int(v), 0) + frac
+        for v in rf.op_flag:
+            h2[int(v)] = h2.get(int(v), 0) + frac
+        binning_loop_s = time.perf_counter() - t0
+        cache_warm_s = None
+        try:
+            import tempfile
+            from repro.core import planio
+            with tempfile.TemporaryDirectory() as d:
+                planio.cached_build_plan(spmv_seed(), {"row": r, "col": c},
+                                         out_len, out_len, cost,
+                                         cache_dir=d)
+                t0 = time.perf_counter()
+                planio.cached_build_plan(spmv_seed(), {"row": r, "col": c},
+                                         out_len, out_len, cost,
+                                         cache_dir=d)
+                cache_warm_s = round(time.perf_counter() - t0, 4)
+        except (RuntimeError, ImportError):
+            pass                        # msgpack unavailable: skip cache row
+        rows.append({
+            "bench": "plan_build", "nnz": nnz, "lane_width": lane,
+            "build_s": round(build_s, 4),
+            "hash_vectorized_s": round(hash_vec_s, 4),
+            "hash_blake2b_per_block_s": round(hash_blake_s, 4),
+            "binning_loop_s": round(binning_loop_s, 4),
+            "cache_warm_s": cache_warm_s,
+            "seed_style_build_s": round(build_s - hash_vec_s + hash_blake_s
+                                        + binning_loop_s, 4),
+        })
+    return rows
+
+
 # -------------------------------------------------- MoE dispatch (beyond)
 def bench_moe_dispatch() -> list[tuple]:
     from repro.models.moe import dispatch_pattern_stats

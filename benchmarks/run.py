@@ -2,11 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = speedup vs the
 baseline where applicable), then the roofline table if dry-run artifacts
-exist.  ``python -m benchmarks.run [--scale full] [--pallas]``
+exist.  ``--json PATH`` additionally writes the machine-readable perf
+trajectory (backend x dataset x fused/per-class ``us_per_call`` plus
+plan-build seconds) — the file checked in as ``BENCH_spmv.json``.
+
+``python -m benchmarks.run [--scale full] [--pallas] [--json out.json]``
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 
 
@@ -15,7 +21,13 @@ def main() -> None:
     ap.add_argument("--scale", default="small", choices=["small", "full"])
     ap.add_argument("--pallas", action="store_true",
                     help="also time the Pallas-interpret backend (slow)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable timings (BENCH_*.json)")
     args = ap.parse_args()
+    if args.json:
+        # fail on an unwritable path now, not after minutes of timing
+        with open(args.json, "a"):
+            pass
     from benchmarks import paper_tables as T
 
     print("name,us_per_call,derived")
@@ -53,9 +65,40 @@ def main() -> None:
             print(f"table8_{name}_iu_pallas_interpret,{t_pl:.1f},"
                   f"interpret-mode (not wall-clock-comparable)")
 
+    # ---- fused vs per-class executor + plan-build trajectory
+    exec_rows = T.bench_spmv_exec(scale=args.scale)
+    for r in exec_rows:
+        print(f"spmv_exec_{r['dataset']}_{r['mode']},{r['us_per_call']:.1f},"
+              f"{r['speedup_vs_per_class']:.2f}x;classes={r['num_classes']};"
+              f"launches={r['num_fused_launches']}")
+    build_rows = T.bench_plan_build()
+    for r in build_rows:
+        warm = r["cache_warm_s"]
+        print(f"plan_build_1M_lane{r['lane_width']},0,"
+              f"build={r['build_s']}s;seed_style={r['seed_style_build_s']}s;"
+              f"cache_warm={warm if warm is not None else 'n/a'}s")
+
     # ---- beyond-paper: MoE dispatch pattern opportunity
     for name, mean_w, ls12 in T.bench_moe_dispatch():
         print(f"{name},0,mean_windows={mean_w:.2f};frac_ls<=2={ls12:.2f}")
+
+    if args.json:
+        import jax
+        payload = {
+            "schema": "bench_spmv.v1",
+            "scale": args.scale,
+            "platform": {
+                "machine": platform.machine(),
+                "python": platform.python_version(),
+                "jax": jax.__version__,
+                "device": jax.devices()[0].platform,
+            },
+            "timings": exec_rows + build_rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"json_written,0,{args.json}", file=sys.stderr)
 
     # ---- roofline table from dry-run artifacts (if present)
     try:

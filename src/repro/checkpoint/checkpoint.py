@@ -20,11 +20,25 @@ import threading
 import jax
 import jax.numpy as jnp
 import ml_dtypes  # noqa: F401  (registers bfloat16 et al. with numpy)
-import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional codec deps: lazy so import works on a bare environment
+    import msgpack
+except ImportError:  # pragma: no cover - env dependent
+    msgpack = None
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - env dependent
+    zstd = None
 
 FORMAT_VERSION = 1
+
+
+def _require_codecs():
+    if msgpack is None or zstd is None:
+        raise RuntimeError(
+            "checkpointing requires the optional 'msgpack' and 'zstandard' "
+            "packages (pip install msgpack zstandard)")
 
 
 def _flatten(tree, prefix=""):
@@ -56,6 +70,7 @@ def save(ckpt_dir: str, step: int, tree, axes_tree=None, extra: dict | None
     """Atomic checkpoint write.  ``block=False`` runs in a daemon thread
     (async staging) — the arrays are fetched to host first so training can
     donate/overwrite device buffers immediately."""
+    _require_codecs()
     flat = _flatten(tree)
     host = {k: np.asarray(v) for k, v in flat.items()}
 
@@ -113,6 +128,7 @@ def restore(ckpt_dir: str, step: int, skeleton, shardings=None):
     """Restore into ``skeleton``'s structure.  ``shardings`` (optional
     pytree of NamedSharding) re-lays-out every leaf for the *current* mesh —
     elastic restore across device-count changes."""
+    _require_codecs()
     tag = f"step_{step:08d}"
     with open(os.path.join(ckpt_dir, tag, "leaves.msgpack.zst"), "rb") as f:
         raw = zstd.ZstdDecompressor().decompress(f.read())

@@ -19,6 +19,16 @@ from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import pagerank_seed, spmv_seed
 
 
+def _plan(seed, access, out_len, data_len, cost, plan_cache_dir):
+    """build_plan, through the content-addressed cache when a dir is given
+    (repeat matrices skip the analysis entirely — DESIGN.md §4)."""
+    if plan_cache_dir is None:
+        return build_plan(seed, access, out_len, data_len, cost=cost)
+    from repro.core import planio
+    return planio.cached_build_plan(seed, access, out_len, data_len,
+                                    cost=cost, cache_dir=plan_cache_dir)
+
+
 @dataclasses.dataclass
 class SpMV:
     plan: BlockPlan
@@ -31,13 +41,14 @@ class SpMV:
                  shape: tuple[int, int], lane_width: int = 128,
                  backend: str = "jax",
                  cost: CostModel | None = None,
-                 fuse_classes: bool = False) -> "SpMV":
+                 fused: bool = True,
+                 plan_cache_dir: str | None = None) -> "SpMV":
         seed = spmv_seed()
         cost = cost or CostModel(lane_width=lane_width)
-        plan = build_plan(seed, {"row": rows, "col": cols},
-                          out_len=shape[0], data_len=shape[1], cost=cost)
+        plan = _plan(seed, {"row": rows, "col": cols},
+                     shape[0], shape[1], cost, plan_cache_dir)
         run = eng.make_executor(plan, {"value": vals}, backend=backend,
-                                fuse_classes=fuse_classes)
+                                fused=fused)
         return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype)
 
     @classmethod
@@ -67,15 +78,15 @@ class PageRank:
                    damping: float = 0.85, lane_width: int = 128,
                    backend: str = "jax",
                    cost: CostModel | None = None,
-                   fuse_classes: bool = False) -> "PageRank":
+                   fused: bool = True,
+                   plan_cache_dir: str | None = None) -> "PageRank":
         seed = pagerank_seed()
         cost = cost or CostModel(lane_width=lane_width)
         deg = np.bincount(src, minlength=num_nodes).astype(np.float64)
         inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
-        plan = build_plan(seed, {"n2": dst, "n1": src},
-                          out_len=num_nodes, data_len=num_nodes, cost=cost)
-        run = eng.make_executor(plan, {}, backend=backend,
-                                fuse_classes=fuse_classes)
+        plan = _plan(seed, {"n2": dst, "n1": src},
+                     num_nodes, num_nodes, cost, plan_cache_dir)
+        run = eng.make_executor(plan, {}, backend=backend, fused=fused)
         return cls(plan=plan, num_nodes=num_nodes,
                    inv_deg=jnp.asarray(inv, jnp.float32),
                    dangling=jnp.asarray(deg == 0),

@@ -4,13 +4,25 @@ Backends:
   * ``jax``    — pure-XLA execution of the specialized plan (class-sorted
     blocks, tile-granular window loads, log-step segmented reduce).  This is
     the portable path and the one used inside the distributed stack.
-  * ``pallas`` — the Pallas TPU kernels in ``repro.kernels`` (one
-    specialization per pattern class); validated with ``interpret=True`` on
-    CPU, targeted at TPU VMEM/MXU.
+  * ``pallas`` — the Pallas TPU kernels in ``repro.kernels``; validated with
+    ``interpret=True`` on CPU, targeted at TPU VMEM/MXU.
+  * ``segsum`` — CPU-optimal single segment-sum form (add only).
   * ``reference`` — direct scatter oracle (un-optimized seed semantics).
   * ``baseline_gather`` — what a conservative compiler emits: native gather
     + full scatter-add, no pattern specialization (the paper's icc baseline
     analogue; used by the benchmarks).
+
+Execution modes (``fused`` flag, default True):
+  * **fused** — the default hot path.  All vload classes collapse into ONE
+    launch (one ``pallas_call`` / one XLA segment) padded to the plan-wide
+    max window count with a shift-reduce ladder covering the longest run,
+    plus one batched XLA segment for all gather-fallback blocks: at most two
+    launches per call regardless of ``num_classes``, and the write-back runs
+    over a precomputed dense head-row buffer (no flat B*N re-gather).
+    Legality argument in DESIGN.md §3.
+  * **per-class** (``fused=False``) — the paper's one-launch-per-pattern-
+    class form (kept for A/B benchmarking and as the bitwise oracle of the
+    fused path).
 
 The executor factory performs the Data Transfer step once (physical nnz
 reorder into class-sorted, in-block-sorted order) and returns a jitted
@@ -69,16 +81,24 @@ def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
     op, _ = REDUCE_OPS[reduce]
     bc, n = term.shape
     if op_flag == ft.FULL_REDUCE:
-        # paper: single-segment block -> architecture-native reduction
-        if reduce == "add":
-            total = jnp.sum(term, axis=1)
-        elif reduce == "mul":
-            total = jnp.prod(term, axis=1)
-        elif reduce == "max":
-            total = jnp.max(term, axis=1)
-        else:
-            total = jnp.min(term, axis=1)
-        return term.at[:, 0].set(total)
+        # paper: single-segment block -> architecture-native reduction.  On
+        # XLA a native row reduce (jnp.sum) does not pin its accumulation
+        # order across different surrounding programs, which would break
+        # the fused-vs-per-class bitwise guarantee — so the XLA form is an
+        # explicit pairwise halving tree: a fixed combine order in every
+        # program (elementwise ops cannot be reassociated by XLA), 2N work
+        # instead of the ladder's N log N, and for power-of-two widths its
+        # root is bit-identical to the masked ladder's head lane.  The
+        # Pallas kernel keeps the true native reduction.
+        total = term
+        while total.shape[1] > 1:
+            w = total.shape[1]
+            if w % 2:
+                total = jnp.pad(total, ((0, 0), (0, 1)),
+                                constant_values=identity)
+                w += 1
+            total = op(total[:, 0::2], total[:, 1::2])
+        return term.at[:, 0].set(total[:, 0])
     for k in range(op_flag):
         d = 1 << k
         shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
@@ -116,71 +136,228 @@ def _gather_class_values(plan: BlockPlan, c: PatternClass, s: slice,
     return vals
 
 
-def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
-                 fuse_classes: bool = False) -> jnp.ndarray:
-    """Run every pattern class; return the (B, N) post-reduce lane matrix.
+def _merge_section(classes: list[PatternClass], ls_flag: int,
+                   lane_width: int) -> PatternClass:
+    """Collapse contiguous pattern classes into one fused launch section.
 
-    ``fuse_classes=True`` merges all vload classes into ONE launch padded to
-    the max window count, with a full log2(N) reduce ladder.  Legality:
-    extra shift-reduce steps are no-ops (the segment-equality mask blocks
-    any combine across run boundaries, and within a run the covered ranges
-    of step k are disjoint), and window slots beyond a block's ls are never
-    selected by its lane permutation.  This trades the paper's per-class
-    specialization for fewer kernel launches — a win where dispatch
-    overhead dominates (XLA-CPU), a loss where the specialized instruction
-    count matters (the paper's setting); both recorded in EXPERIMENTS §Perf.
+    The merged ``op_flag`` is the ladder depth covering every member class:
+    extra shift-reduce steps are exact no-ops (DESIGN.md §3), and window
+    slots beyond a block's own ``ls`` are never selected by its lane
+    permutation (``window_ids`` padding repeats the last valid window).
     """
     import math
+    full = int(math.ceil(math.log2(max(lane_width, 2))))
+    if all(c.op_flag == ft.FULL_REDUCE for c in classes):
+        op = ft.FULL_REDUCE
+    else:
+        op = max(full if c.op_flag == ft.FULL_REDUCE else c.op_flag
+                 for c in classes)
+    return PatternClass(ls_flag=ls_flag, op_flag=op,
+                        stream=all(c.stream for c in classes),
+                        start=min(c.start for c in classes),
+                        stop=max(c.stop for c in classes))
+
+
+def fused_sections(plan: BlockPlan) -> list[PatternClass]:
+    """The fused launch list for the Pallas backend: at most one
+    gather-fallback section plus one vload section (class binning sorts
+    fallback classes first, so each section is a contiguous exec-order
+    block range)."""
+    fb = [c for c in plan.classes if c.ls_flag == GATHER_FALLBACK]
+    vl = [c for c in plan.classes if c.ls_flag != GATHER_FALLBACK]
+    sections = []
+    for group, ls in ((fb, GATHER_FALLBACK),
+                      (vl, max((c.ls_flag for c in vl), default=0))):
+        if not group:
+            continue
+        sec = _merge_section(group, ls, plan.lane_width)
+        assert sec.num_blocks == sum(c.num_blocks for c in group), \
+            "pattern classes of one section must be exec-contiguous"
+        sections.append(sec)
+    return sections
+
+
+# Fusing is a dispatch/fragmentation optimization: below this many pattern
+# classes the per-class specialized launches (stream copies, narrow window
+# loads) are already optimal and merging only costs padding, so the fused
+# mode keeps them (measured on the small suite, DESIGN.md §3).
+_FUSE_MIN_CLASSES = 4
+
+
+def fused_xla_classes(plan: BlockPlan) -> list[PatternClass]:
+    """The fused launch list for the XLA backend: adjacent pattern classes
+    merged by ``op_flag`` into op-groups that gather directly through the
+    post-sort ``gather_idx``.  On XLA the tile-granular window loads lower
+    to a gather HLO over the identical float words, so a merged group loses
+    nothing semantically (bitwise-equal to the per-class launches); and
+    because ``op`` is the minor exec-order key, same-depth blocks are
+    contiguous — each block gets exactly the shift-reduce depth its class
+    needs, in at most ``2 * (log2(N) + 2)`` static slices of one jitted
+    graph instead of one launch per (ls, op, stream) class.
+
+    Fragmented plans (many small classes — the irregular inputs the paper
+    targets) collapse ~10x; plans already at a handful of launches keep
+    their per-class specializations, so the fused mode never regresses the
+    regular inputs where per-class stream/window forms are the best code.
+    """
+    groups: list[PatternClass] = []
+    for c in plan.classes:
+        if groups and groups[-1].op_flag == c.op_flag \
+                and groups[-1].stop == c.start:
+            prev = groups[-1]
+            groups[-1] = PatternClass(ls_flag=GATHER_FALLBACK,
+                                      op_flag=prev.op_flag, stream=False,
+                                      start=prev.start, stop=c.stop)
+        else:
+            groups.append(PatternClass(ls_flag=GATHER_FALLBACK,
+                                       op_flag=c.op_flag, stream=False,
+                                       start=c.start, stop=c.stop))
+    if len(plan.classes) <= max(_FUSE_MIN_CLASSES, 2 * len(groups)):
+        return list(plan.classes)
+    return groups
+
+
+def section_full_mask(plan: BlockPlan, sec: PatternClass) -> np.ndarray | None:
+    """Per-block native-reduction flags for a fused section: True where the
+    covering pattern class is ``FULL_REDUCE`` (single-segment block), so the
+    fused launch can keep the architecture-native reduction for exactly the
+    blocks the per-class path would give it to.  None when the section has
+    no such member (or is itself pure ``FULL_REDUCE``)."""
+    if sec.op_flag == ft.FULL_REDUCE:
+        return None
+    mask = np.zeros(sec.num_blocks, dtype=bool)
+    for c in plan.classes:
+        if (c.op_flag == ft.FULL_REDUCE
+                and c.start >= sec.start and c.stop <= sec.stop):
+            mask[c.start - sec.start:c.stop - sec.start] = True
+    return mask if mask.any() else None
+
+
+def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
+                 classes: list[PatternClass]) -> jnp.ndarray:
+    """Run the given launch list (pattern classes or fused op-groups);
+    return the (B, N) post-reduce lane matrix in exec-block order.  Mixed
+    native/ladder sections never occur here — ``fused_xla_classes`` merges
+    only equal-op classes, so per-block full-reduce selection is a Pallas
+    concern (``ops.make_stage_a``)."""
     seed = plan.seed
     parts = []
-    classes = plan.classes
-    if fuse_classes:
-        vload = [c for c in classes if c.ls_flag != GATHER_FALLBACK]
-        rest = [c for c in classes if c.ls_flag == GATHER_FALLBACK]
-        classes = list(rest)
-        if vload:
-            classes.append(PatternClass(
-                ls_flag=max(c.ls_flag for c in vload),
-                op_flag=int(math.ceil(math.log2(plan.lane_width))),
-                stream=all(c.stream for c in vload),
-                start=min(c.start for c in vload),
-                stop=max(c.stop for c in vload)))
     for c in classes:
         s = plan.class_slice(c)
         vals = _gather_class_values(plan, c, s, meta, mutable)
         for e in seed.elementwise:
             vals[e] = elem_exec[e][s]
         term = seed.combine(vals)
-        term = segmented_reduce(term, meta["seg_ids"][s], c.op_flag,
-                                seed.reduce, seed.reduce_identity)
-        parts.append(term)
-    return jnp.concatenate(parts, axis=0)
+        red = segmented_reduce(term, meta["seg_ids"][s], c.op_flag,
+                               seed.reduce, seed.reduce_identity)
+        parts.append(red)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
 def _stage_b(plan: BlockPlan, meta, lanes: jnp.ndarray,
              out_init: jnp.ndarray) -> jnp.ndarray:
-    """Merged write-back (Fig. 4): one RMW per distinct (block, row) head."""
-    hv = lanes.reshape(-1)[meta["head_pos"]]
-    rows = meta["head_rows"]
+    """Merged write-back (Fig. 4): one RMW per distinct (block, row) head.
+    Head values are re-gathered from the flat (B*N) lane stream in
+    row-sorted order, cross-block contributions to one row are combined by
+    a log-step tree (deterministic float order), and the final scatter hits
+    each output row at most once — XLA's unspecified accumulation order for
+    duplicate scatter indices can therefore never perturb the result, which
+    is what makes fused and per-class launches bitwise-comparable end to
+    end (DESIGN.md §3)."""
+    hv = lanes.reshape(-1)[meta["head_pos_rowsorted"]]
     seed = plan.seed
+    seg = meta["head_row_seg"]
+    from repro.core.seed import REDUCE_OPS
+    op, identity = REDUCE_OPS[seed.reduce]
+    for k in range(int(meta["head_tree_depth"])):
+        d = 1 << k
+        shifted = jnp.pad(hv[d:], (0, d), constant_values=identity)
+        seg_shift = jnp.pad(seg[d:], (0, d), constant_values=_SEG_PAD)
+        hv = jnp.where(seg == seg_shift, op(hv, shifted), hv)
+    vals = hv[meta["head_run_starts"]]
+    rows = meta["head_unique_rows"]
     if seed.reduce == "add":
-        return out_init.at[rows].add(hv)
+        return out_init.at[rows].add(vals)
     if seed.reduce == "mul":
-        return out_init.at[rows].multiply(hv)
+        return out_init.at[rows].multiply(vals)
     if seed.reduce == "max":
-        return out_init.at[rows].max(hv)
-    return out_init.at[rows].min(hv)
+        return out_init.at[rows].max(vals)
+    return out_init.at[rows].min(vals)
+
+
+def head_write_meta(plan: BlockPlan) -> dict:
+    """Static metadata for the collision-free write-back: heads sorted by
+    output row (stable in exec order), per-row run structure, and the tree
+    depth covering the longest run."""
+    order = np.argsort(plan.head_rows, kind="stable")
+    rows_sorted = plan.head_rows[order]
+    change = np.ones(rows_sorted.shape[0], dtype=bool)
+    change[1:] = rows_sorted[1:] != rows_sorted[:-1]
+    seg = np.cumsum(change) - 1
+    counts = np.diff(np.append(np.nonzero(change)[0],
+                               rows_sorted.shape[0]))
+    depth = int(np.ceil(np.log2(counts.max()))) if counts.size \
+        and counts.max() > 1 else 0
+    return {
+        "head_pos_rowsorted": jnp.asarray(plan.head_pos[order]),
+        "head_row_seg": jnp.asarray(seg.astype(np.int32)),
+        "head_run_starts": jnp.asarray(
+            np.nonzero(change)[0].astype(np.int64)),
+        "head_unique_rows": jnp.asarray(rows_sorted[change]),
+        "head_tree_depth": depth,
+    }
+
+
+def dense_head_rows(plan: BlockPlan) -> np.ndarray:
+    """(B*N,) int32: output row per exec lane for head lanes, ``out_len``
+    (a discard bucket) for every other lane — the precomputed dense head
+    buffer of the fused write-back."""
+    rows = np.full(plan.num_blocks * plan.lane_width, plan.out_len, np.int64)
+    rows[plan.head_pos] = plan.head_rows
+    return rows.astype(np.int32)
+
+
+def _stage_b_dense(plan: BlockPlan, meta, lanes: jnp.ndarray,
+                   out_init: jnp.ndarray) -> jnp.ndarray:
+    """Fused write-back: scatter the whole post-reduce lane stream through
+    the dense head-row buffer (non-head lanes land in the discard bucket at
+    ``out_len``), avoiding the flat B*N re-gather of :func:`_stage_b`."""
+    rows = meta["lane_rows"]
+    flat = lanes.reshape(-1)
+    seed = plan.seed
+    n_out = plan.out_len
+    if seed.reduce == "add":
+        acc = jnp.zeros(n_out + 1, flat.dtype).at[rows].add(flat)
+        return out_init + acc[:n_out]
+    if seed.reduce == "mul":
+        acc = jnp.ones(n_out + 1, flat.dtype).at[rows].multiply(flat)
+        return out_init * acc[:n_out]
+    if seed.reduce == "max":
+        acc = jnp.full(n_out + 1, -jnp.inf, flat.dtype).at[rows].max(flat)
+        return jnp.maximum(out_init, acc[:n_out])
+    acc = jnp.full(n_out + 1, jnp.inf, flat.dtype).at[rows].min(flat)
+    return jnp.minimum(out_init, acc[:n_out])
 
 
 def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                   backend: str = "jax", interpret: bool | None = None,
-                  fuse_classes: bool = False):
+                  fused: bool = True, stage_b: str = "auto",
+                  fuse_classes: bool | None = None):
     """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
 
     ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
     arrays in original order; they are reordered once here (Data Transfer)
     and closed over as device constants.
+
+    ``fused`` (default) collapses the per-class launch list into at most
+    two launches (DESIGN.md §3); ``fused=False`` keeps the paper's
+    one-launch-per-pattern-class form.  ``stage_b`` selects the write-back:
+    ``"gather"`` (head re-gather from the flat lane stream), ``"dense"``
+    (scatter the full lane stream through the precomputed dense head-row
+    buffer), or ``"auto"`` (dense when heads dominate the lane stream).
     """
+    if fuse_classes is not None:      # legacy alias of the pre-fused API
+        fused = fuse_classes
     seed = plan.seed
     elem_exec = {e: reorder_elementwise(plan, static_data[e],
                                         seed.reduce_identity)
@@ -191,16 +368,29 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         "lane_offset": jnp.asarray(plan.lane_offset),
         "seg_ids": jnp.asarray(plan.seg_ids),
         "gather_idx": jnp.asarray(plan.gather_idx),
-        "head_pos": jnp.asarray(plan.head_pos),
-        "head_rows": jnp.asarray(plan.head_rows),
     }
+    if stage_b == "auto":
+        # always the collision-free gather write-back: it is both faster on
+        # XLA-CPU and the only form with a cross-program bitwise guarantee
+        # (DESIGN.md §3).  The dense head-buffer scatter stays explicit
+        # opt-in for TPU experiments.
+        stage_b = "gather"
+    if stage_b == "dense":
+        meta["lane_rows"] = jnp.asarray(dense_head_rows(plan))
+        write_back = _stage_b_dense
+    elif stage_b == "gather":
+        meta.update(head_write_meta(plan))
+        write_back = _stage_b
+    else:
+        raise ValueError(f"unknown stage_b {stage_b!r}")
 
     if backend == "jax":
+        classes = fused_xla_classes(plan) if fused else plan.classes
+
         @jax.jit
         def run(mutable, out_init):
-            lanes = _stage_a_jax(plan, meta, elem_exec, mutable,
-                                 fuse_classes=fuse_classes)
-            return _stage_b(plan, meta, lanes, out_init)
+            lanes = _stage_a_jax(plan, meta, elem_exec, mutable, classes)
+            return write_back(plan, meta, lanes, out_init)
         return run
 
     if backend == "segsum":
@@ -244,12 +434,12 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         if interpret is None:
             interpret = jax.devices()[0].platform != "tpu"
         stage_a = kops.make_stage_a(plan, meta, elem_exec,
-                                    interpret=interpret)
+                                    interpret=interpret, fused=fused)
 
         @jax.jit
         def run_pl(mutable, out_init):
             lanes = stage_a(mutable)
-            return _stage_b(plan, meta, lanes, out_init)
+            return write_back(plan, meta, lanes, out_init)
         return run_pl
 
     raise ValueError(f"unknown backend {backend!r}")

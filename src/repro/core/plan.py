@@ -162,23 +162,34 @@ def build_plan(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     hashes = ft.pattern_hashes(gf, rf)
     dedup = ft.dedup_ratio(hashes)
 
-    # ---- class binning + cost model
+    # ---- class binning + cost model (vectorized: encode the class key into
+    # one order-preserving int64 and np.unique it — no per-block zip/dict
+    # loop).  Exec-order key is (fallback?, op, ls, stream): the fallback /
+    # vload split is the major key so each fused launch section is one
+    # contiguous block range, and op is the next key so the fused ladder
+    # runs per contiguous op-group — every block gets exactly the
+    # shift-reduce depth its class needs (DESIGN.md §3).
     ls_class, stream = _class_key_of_blocks(gf, rf, cost)
     op_class = rf.op_flag
-    keys = list(zip(ls_class.tolist(), op_class.tolist(), stream.tolist()))
-    uniq = sorted(set(keys))
-    key_to_cid = {k: i for i, k in enumerate(uniq)}
-    cid = np.array([key_to_cid[k] for k in keys], dtype=np.int32)
+    # op_class >= FULL_REDUCE (-1) so op+1 >= 0 and < 2^16; ls < 2^20.
+    key_code = (((ls_class != GATHER_FALLBACK).astype(np.int64) << 40)
+                | ((op_class.astype(np.int64) + 1) << 24)
+                | (ls_class.astype(np.int64) << 4)
+                | stream.astype(np.int64))
+    uniq_codes, cid = np.unique(key_code, return_inverse=True)
+    cid = cid.astype(np.int32)
     exec_order = np.argsort(cid, kind="stable")        # original block -> sorted
-    cid_exec = cid[exec_order]
+    counts = np.bincount(cid, minlength=uniq_codes.shape[0])
+    stops = np.cumsum(counts)
+    starts = stops - counts
 
     classes = []
-    for i, k in enumerate(uniq):
-        members = np.nonzero(cid_exec == i)[0]
-        classes.append(PatternClass(ls_flag=int(k[0]), op_flag=int(k[1]),
-                                    stream=bool(k[2]),
-                                    start=int(members[0]),
-                                    stop=int(members[-1]) + 1))
+    for i, code in enumerate(uniq_codes.tolist()):
+        classes.append(PatternClass(ls_flag=int((code >> 4) & 0xFFFFF),
+                                    op_flag=int(((code >> 24) & 0xFFFF) - 1),
+                                    stream=bool(code & 1),
+                                    start=int(starts[i]),
+                                    stop=int(stops[i])))
 
     # ---- reorder all per-block metadata into exec order
     def r(a):
@@ -198,13 +209,14 @@ def build_plan(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     head_pos = np.nonzero(head_mask.reshape(-1))[0].astype(np.int64)
     head_rows = write_sorted.reshape(-1)[head_pos]
 
-    # ---- stats (paper Tables 1–3 / Table 6 accounting)
+    # ---- stats (paper Tables 1–3 / Table 6 accounting), vectorized
     frac = 1.0 / max(b, 1)
-    ls_hist, op_hist = {}, {}
-    for v in gf.num_windows:
-        ls_hist[int(v)] = ls_hist.get(int(v), 0) + frac
-    for v in rf.op_flag:
-        op_hist[int(v)] = op_hist.get(int(v), 0) + frac
+    ls_u, ls_c = np.unique(gf.num_windows, return_counts=True)
+    ls_hist = {int(k): float(c) * frac
+               for k, c in zip(ls_u.tolist(), ls_c.tolist())}
+    op_u, op_c = np.unique(rf.op_flag, return_counts=True)
+    op_hist = {int(k): float(c) * frac
+               for k, c in zip(op_u.tolist(), op_c.tolist())}
     meta_bytes = (lane_slot.nbytes + lane_offset.nbytes +
                   np.int8(0).nbytes * seg_ids.size +  # seg ids ship as int8 equivalent
                   window_ids.nbytes + head_pos.nbytes + head_rows.nbytes)

@@ -1,17 +1,38 @@
-"""Plan serialization: persist a BlockPlan so the one-time analysis
-(feature table + class binning + Data Transfer permutation) amortizes
-across processes — the offline analogue of the paper's runtime-JIT code
-cache.  msgpack + zstd, same stack as checkpoints."""
+"""Plan serialization + content-addressed plan cache.
+
+Persisting a BlockPlan lets the one-time analysis (feature table + class
+binning + Data Transfer permutation) amortize across processes — the
+offline analogue of the paper's runtime-JIT code cache.  The cache is
+content-addressed: the key is a blake2b digest of the immutable access
+arrays plus the CostModel (DESIGN.md §4), so a repeat matrix skips the
+analysis entirely and a changed matrix or cost model can never alias a
+stale plan.
+
+Format: msgpack payload, zstd-compressed when ``zstandard`` is available
+(a 5-byte magic header records which).  ``msgpack`` is required for
+serialization; both imports are lazy so this module (and the plan cache
+fall-through) works on a bare environment.
+"""
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import tempfile
 
-import msgpack
 import numpy as np
-import zstandard as zstd
 
-from repro.core.plan import BlockPlan, PatternClass, PlanStats
+from repro.core.plan import BlockPlan, CostModel, PatternClass, PlanStats, \
+    build_plan
 from repro.core import seed as seed_mod
+
+try:                                    # optional: smaller files when present
+    import zstandard as _zstd
+except ImportError:                     # pragma: no cover - env dependent
+    _zstd = None
+
+_MAGIC_ZSTD = b"IUP1Z"
+_MAGIC_RAW = b"IUP1R"
 
 _ARRAYS = ("window_ids", "lane_slot", "lane_offset", "seg_ids",
            "gather_idx", "valid", "flat_perm", "head_pos", "head_rows")
@@ -20,7 +41,18 @@ _SCALARS = ("lane_width", "nnz", "out_len", "data_len", "num_blocks")
 _SEEDS = {"spmv": seed_mod.spmv_seed, "pagerank_push": seed_mod.pagerank_seed}
 
 
+def _msgpack():
+    try:
+        import msgpack
+    except ImportError as e:            # pragma: no cover - env dependent
+        raise RuntimeError(
+            "plan serialization requires the optional 'msgpack' package "
+            "(pip install msgpack)") from e
+    return msgpack
+
+
 def save_plan(path: str, plan: BlockPlan):
+    msgpack = _msgpack()
     if plan.seed.name not in _SEEDS:
         raise ValueError(
             f"only registry seeds are serializable ({sorted(_SEEDS)}); "
@@ -38,13 +70,34 @@ def save_plan(path: str, plan: BlockPlan):
                    for k in _ARRAYS},
     }
     raw = msgpack.packb(payload, use_bin_type=True)
+    if _zstd is not None:
+        blob = _MAGIC_ZSTD + _zstd.ZstdCompressor(level=3).compress(raw)
+    else:
+        blob = _MAGIC_RAW + raw
     with open(path, "wb") as f:
-        f.write(zstd.ZstdCompressor(level=3).compress(raw))
+        f.write(blob)
 
 
 def load_plan(path: str) -> BlockPlan:
+    msgpack = _msgpack()
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        blob = f.read()
+    magic, body = blob[:5], blob[5:]
+    if magic == _MAGIC_ZSTD:
+        if _zstd is None:               # pragma: no cover - env dependent
+            raise RuntimeError(
+                f"{path} is zstd-compressed but 'zstandard' is unavailable")
+        raw = _zstd.ZstdDecompressor().decompress(body)
+    elif magic == _MAGIC_RAW:
+        raw = body
+    elif blob[:4] == b"\x28\xb5\x2f\xfd":
+        # legacy format: the whole file is one bare zstd frame
+        if _zstd is None:               # pragma: no cover - env dependent
+            raise RuntimeError(
+                f"{path} is zstd-compressed but 'zstandard' is unavailable")
+        raw = _zstd.ZstdDecompressor().decompress(blob)
+    else:
+        raise ValueError(f"{path}: not a plan file (bad magic {magic!r})")
     p = msgpack.unpackb(raw, raw=False, strict_map_key=False)
     arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(
         v["shape"]) for k, v in p["arrays"].items()}
@@ -55,3 +108,88 @@ def load_plan(path: str) -> BlockPlan:
     stats = PlanStats(**st)
     return BlockPlan(seed=_SEEDS[p["seed"]](), classes=classes, stats=stats,
                      **p["scalars"], **arrays)
+
+
+# --------------------------------------------------- content-addressed cache
+_FP_MULT_CACHE: dict = {}
+
+
+def _fp_multipliers(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Position-multiplier streams for :func:`_array_fingerprint`, cached by
+    length (access arrays of one matrix share a length, and repeat lookups
+    are the whole point of the cache)."""
+    from repro.core import feature_table as ft
+    hit = _FP_MULT_CACHE.get(n)
+    if hit is None:
+        with np.errstate(over="ignore"):
+            pos = ft._mix64(np.arange(1, n + 1, dtype=np.uint64))
+            hit = (pos | np.uint64(1), ft._mix64(pos) | np.uint64(1))
+        _FP_MULT_CACHE.clear()          # keep at most one length resident
+        _FP_MULT_CACHE[n] = hit
+    return hit
+
+
+def _array_fingerprint(a: np.ndarray) -> bytes:
+    """128-bit position-sensitive multilinear fingerprint of an int array,
+    computed at numpy memory bandwidth (hashing the raw bytes through a
+    cryptographic digest costs more than the whole warm cache hit).  Two
+    independent 64-bit multilinear sums give ~2^-128 pairwise collision
+    probability — content-addressing quality in a non-adversarial setting
+    (DESIGN.md §4)."""
+    v = np.ascontiguousarray(a, dtype=np.int64).view(np.uint64)
+    m1, m2 = _fp_multipliers(v.size)
+    with np.errstate(over="ignore"):
+        h1 = (v * m1).sum(dtype=np.uint64)
+        h2 = (v * m2).sum(dtype=np.uint64)
+    return np.array([h1, h2, np.uint64(v.size)], dtype=np.uint64).tobytes()
+
+
+def plan_digest(seed_name: str, access: dict, out_len: int, data_len: int,
+                cost: CostModel) -> str:
+    """Cache key: digest of everything ``build_plan`` consumes, so two
+    logically-equal matrices share a plan and any change misses."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"planio.v2|{seed_name}|{out_len}|{data_len}|"
+             f"{cost.lane_width}|{cost.window_cutoff}|"
+             f"{cost.elem_bytes}|{cost.idx_bytes}".encode())
+    for k in sorted(access):
+        h.update(f"|{k}|".encode())
+        h.update(_array_fingerprint(access[k]))
+    return h.hexdigest()
+
+
+def cached_build_plan(seed, access: dict, out_len: int, data_len: int,
+                      cost: CostModel | None = None,
+                      cache_dir: str | None = None) -> BlockPlan:
+    """:func:`build_plan` behind the content-addressed cache.
+
+    With ``cache_dir`` set, a repeat (access, cost) pair loads the stored
+    plan instead of re-running the analysis.  Falls through to a plain
+    build when caching is impossible (no msgpack, unregistered seed) or
+    the cached file is unreadable — a cache must never change results.
+    """
+    cost = cost or CostModel()
+    if cache_dir is None or seed.name not in _SEEDS:
+        return build_plan(seed, access, out_len, data_len, cost=cost)
+    try:
+        _msgpack()
+    except RuntimeError:
+        return build_plan(seed, access, out_len, data_len, cost=cost)
+    digest = plan_digest(seed.name, access, out_len, data_len, cost)
+    path = os.path.join(cache_dir, f"{seed.name}-{digest}.plan")
+    if os.path.exists(path):
+        try:
+            return load_plan(path)
+        except Exception:
+            pass                        # corrupt/stale entry: rebuild below
+    plan = build_plan(seed, access, out_len, data_len, cost=cost)
+    os.makedirs(cache_dir, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        save_plan(tmp, plan)
+        os.replace(tmp, path)           # atomic publish
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return plan

@@ -1,24 +1,31 @@
-"""Pallas TPU kernel for Intelligent-Unroll stage A (one pattern class).
+"""Pallas TPU kernel for Intelligent-Unroll stage A.
 
-One ``pallas_call`` per pattern class (the paper's per-pattern generated
-code).  Grid = blocks of the class; per grid step the kernel
+One ``pallas_call`` per launch — a pattern class in per-class mode, or the
+whole vload section in fused mode (the grid spans every vload block).  Per
+grid step the kernel
 
-  1. receives the class's ``ls_flag`` windows of each gathered array as
-     VMEM tiles — the window *index* is runtime data (scalar-prefetched
+  1. receives the launch's ``ls`` windows of each gathered array as VMEM
+     tiles — the window *index* is runtime data (scalar-prefetched
      ``window_ids``), so the HBM->VMEM DMAs are dynamic but tile-granular
      and pipelined across grid steps by the Pallas scheduler.  This is the
-     paper's ``vload`` group replacing the per-element ``gather``.
+     paper's ``vload`` group replacing the per-element ``gather``.  In
+     fused mode ``ls`` is the section-wide max: slots beyond a block's own
+     window count repeat the last valid window id (legal DMA, never
+     selected by the lane permutation).
   2. applies the static per-lane permutation + select via a one-hot MXU
      matmul (paper Fig. 6: permutation + select instructions),
   3. evaluates the seed's combine expression on the lane vectors,
   4. runs ``op_flag`` masked shift-reduce steps (paper Fig. 5) so each
-     segment head lane holds the segment total.
+     segment head lane holds the segment total.  In fused ``mixed`` mode a
+     second scalar-prefetched per-block flag selects the architecture-
+     native full reduction for single-segment blocks — bitwise-identical
+     to the per-class launch of the same block (DESIGN.md §3).
 
 Outputs the (1, N) post-reduce lane vector; the merged write-back (Fig. 4)
 happens outside (stage B) on the compressed head stream.
 
-VMEM budget per step: (ls_flag * n_gathered + n_elementwise + 4) lane tiles
-of N floats/ints — a few KB at N=128; BlockSpecs keep everything lane-tile
+VMEM budget per step: (ls * n_gathered + n_elementwise + 4) lane tiles of N
+floats/ints — a few KB at N=128; BlockSpecs keep everything lane-tile
 aligned (last dim N, MXU/VPU native).
 """
 from __future__ import annotations
@@ -34,9 +41,9 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import common
 
 
-def _stage_a_body(win_ref, *refs, combine: Callable, gathered: tuple,
-                  elementwise: tuple, ls: int, op: int, stream: bool,
-                  reduce: str, out_dtype):
+def _stage_a_body(win_ref, flag_ref, *refs, combine: Callable,
+                  gathered: tuple, elementwise: tuple, ls: int, op: int,
+                  stream: bool, mixed: bool, reduce: str, out_dtype):
     """Kernel body. ``refs`` layout:
     [g0_win0..g0_win{ls-1}, g1_win0.., ...] + [elem...] +
     [slot, offset, seg] + [out]."""
@@ -60,32 +67,45 @@ def _stage_a_body(win_ref, *refs, combine: Callable, gathered: tuple,
         vals[e] = elem_refs[ei][...][0].astype(jnp.float32)
 
     term = combine(vals).reshape(1, -1)
-    term = common.segmented_reduce_lanes(term, seg_ref[...], op, reduce)
-    out_ref[...] = term.astype(out_dtype)
+    red = common.segmented_reduce_lanes(term, seg_ref[...], op, reduce)
+    if mixed:
+        # fused section with single-segment members: the scalar-prefetched
+        # per-block flag keeps the native reduction for exactly those blocks
+        native = common.segmented_reduce_lanes(term, seg_ref[...],
+                                               common.FULL_REDUCE, reduce)
+        red = jnp.where(flag_ref[pl.program_id(0)] != 0, native, red)
+    out_ref[...] = red.astype(out_dtype)
 
 
 def class_stage_a(win_ids: jnp.ndarray, gathered_views: dict,
                   elem_blocks: dict, slot: jnp.ndarray, off: jnp.ndarray,
                   seg: jnp.ndarray, *, combine: Callable,
                   gathered: tuple, elementwise: tuple, ls: int, op: int,
-                  stream: bool, reduce: str, out_dtype=jnp.float32,
+                  stream: bool, reduce: str,
+                  full_flags: jnp.ndarray | None = None,
+                  out_dtype=jnp.float32,
                   interpret: bool = True) -> jnp.ndarray:
-    """Launch stage A for one pattern class.
+    """Launch stage A for one pattern class / fused section.
 
     win_ids        (Bc, ls) int32 — scalar-prefetched window indices
     gathered_views g -> (W, N) lane-tile view of the dense array
     elem_blocks    e -> (Bc, N) exec-order immutable data
     slot/off/seg   (Bc, N) int32
+    full_flags     (Bc,) int32 or None — per-block native-reduction flags
+                   (fused mixed sections only), scalar-prefetched
     returns        (Bc, N) post-reduce lane matrix
     """
     bc, n = slot.shape
+    mixed = full_flags is not None
+    if full_flags is None:
+        full_flags = jnp.zeros((bc,), jnp.int32)
     body = functools.partial(_stage_a_body, combine=combine,
                              gathered=gathered, elementwise=elementwise,
-                             ls=ls, op=op, stream=stream, reduce=reduce,
-                             out_dtype=out_dtype)
+                             ls=ls, op=op, stream=stream, mixed=mixed,
+                             reduce=reduce, out_dtype=out_dtype)
 
     def _win_index_map(k):
-        def im(b, w):
+        def im(b, w, f):
             return (w[b, k], 0)
         return im
 
@@ -96,21 +116,21 @@ def class_stage_a(win_ids: jnp.ndarray, gathered_views: dict,
             in_specs.append(pl.BlockSpec((1, n), _win_index_map(k)))
             operands.append(gathered_views[g])
     for e in elementwise:
-        in_specs.append(pl.BlockSpec((1, n), lambda b, w: (b, 0)))
+        in_specs.append(pl.BlockSpec((1, n), lambda b, w, f: (b, 0)))
         operands.append(elem_blocks[e])
     for meta in (slot, off, seg):
-        in_specs.append(pl.BlockSpec((1, n), lambda b, w: (b, 0)))
+        in_specs.append(pl.BlockSpec((1, n), lambda b, w, f: (b, 0)))
         operands.append(meta)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(bc,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, n), lambda b, w: (b, 0)),
+        out_specs=pl.BlockSpec((1, n), lambda b, w, f: (b, 0)),
     )
     fn = pl.pallas_call(
         body, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bc, n), out_dtype),
         interpret=interpret,
     )
-    return fn(win_ids, *operands)
+    return fn(win_ids, full_flags, *operands)

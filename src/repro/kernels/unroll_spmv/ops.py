@@ -1,10 +1,17 @@
-"""Jitted wrapper assembling per-class Pallas launches into stage A.
+"""Jitted wrapper assembling Pallas launches into stage A.
 
 ``make_stage_a(plan, ...)`` returns a function ``fn(mutable) -> (B, N)``
-lanes matrix in exec-block order: one ``pallas_call`` per specialized
-pattern class + the XLA native-gather path for fallback classes (by
-definition "let the compiler emit the gather" — paper §6.3 applies the
-rewrite only when the flags indicate a benefit).
+lanes matrix in exec-block order.  Two launch modes:
+
+* ``fused=True`` (default): ONE ``pallas_call`` covering every vload block
+  — the grid spans the whole vload section, window BlockSpecs are padded to
+  the section-wide max ``ls`` (scalar-prefetched ``window_ids`` repeat the
+  last valid window, so the extra DMAs are legal and lanes never select
+  them), and the shift-reduce ladder is deep enough for every member class
+  (extra steps are exact no-ops, DESIGN.md §3) — plus ONE batched XLA
+  segment for all gather-fallback blocks.  At most two launches per call.
+* ``fused=False``: the paper's one-``pallas_call``-per-pattern-class form
+  (§6.3 applies the rewrite only when the flags indicate a benefit).
 """
 from __future__ import annotations
 
@@ -15,12 +22,15 @@ from repro.core.plan import GATHER_FALLBACK, BlockPlan
 from repro.kernels.unroll_spmv.kernel import class_stage_a
 
 
-def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True):
+def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
+                 fused: bool = True):
     seed = plan.seed
-    # per-class static metadata, upcast to kernel-friendly int32 once
+    classes = eng.fused_sections(plan) if fused else plan.classes
+    # per-launch static metadata, upcast to kernel-friendly int32 once
     class_meta = []
-    for c in plan.classes:
+    for c in classes:
         s = plan.class_slice(c)
+        mask = eng.section_full_mask(plan, c) if fused else None
         class_meta.append(dict(
             win=jnp.asarray(plan.window_ids[s][:, :max(c.ls_flag, 1)],
                             jnp.int32),
@@ -28,13 +38,14 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True):
             off=jnp.asarray(plan.lane_offset[s], jnp.int32),
             seg=jnp.asarray(plan.seg_ids[s], jnp.int32),
             gidx=jnp.asarray(plan.gather_idx[s], jnp.int32),
+            full=None if mask is None else jnp.asarray(mask, jnp.int32),
         ))
 
     def stage_a(mutable):
         views = {g: eng._pad_gathered(plan, jnp.asarray(mutable[g]))
                  for g in seed.gathered}
         parts = []
-        for c, cm in zip(plan.classes, class_meta):
+        for c, cm in zip(classes, class_meta):
             s = plan.class_slice(c)
             elem_blocks = {e: elem_exec[e][s] for e in seed.elementwise}
             if c.ls_flag == GATHER_FALLBACK and seed.gather_index is not None:
@@ -43,17 +54,22 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True):
                         for g in seed.gathered}
                 vals.update(elem_blocks)
                 term = seed.combine(vals)
-                term = eng.segmented_reduce(term, cm["seg"], c.op_flag,
-                                            seed.reduce,
-                                            seed.reduce_identity)
-                parts.append(term)
+                red = eng.segmented_reduce(term, cm["seg"], c.op_flag,
+                                           seed.reduce,
+                                           seed.reduce_identity)
+                if cm["full"] is not None:
+                    native = eng.segmented_reduce(
+                        term, cm["seg"], eng.ft.FULL_REDUCE, seed.reduce,
+                        seed.reduce_identity)
+                    red = jnp.where((cm["full"] != 0)[:, None], native, red)
+                parts.append(red)
                 continue
             parts.append(class_stage_a(
                 cm["win"], views, elem_blocks, cm["slot"], cm["off"],
                 cm["seg"], combine=seed.combine, gathered=seed.gathered,
                 elementwise=seed.elementwise, ls=max(c.ls_flag, 1),
                 op=c.op_flag, stream=c.stream, reduce=seed.reduce,
-                interpret=interpret))
-        return jnp.concatenate(parts, axis=0)
+                full_flags=cm["full"], interpret=interpret))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
     return stage_a

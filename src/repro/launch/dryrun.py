@@ -223,6 +223,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+                cost = cost[0] if cost else {}
+            if cost is None:
+                cost = {}
             hlo = compiled.as_text()
         coll = parse_collectives(hlo)
         analysis = analyze_hlo(hlo)   # loop-aware static analysis

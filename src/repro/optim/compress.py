@@ -16,7 +16,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # older jax: pre-stabilization location
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PS
 
 

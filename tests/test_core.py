@@ -1,8 +1,8 @@
-"""Core engine tests: plan invariants (hypothesis) + end-to-end oracles."""
+"""Core engine tests: end-to-end oracles (property tests with hypothesis
+live in test_core_properties so this module runs on a bare environment)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import feature_table as ft
 from repro.core.plan import build_plan, CostModel, GATHER_FALLBACK
@@ -12,98 +12,6 @@ from repro.core.apps import SpMV, PageRank, pagerank_reference
 from repro.sparse import generators as G
 
 
-# ---------------------------------------------------------------- hypothesis
-@given(
-    nnz=st.integers(1, 400),
-    out_len=st.integers(1, 64),
-    data_len=st.integers(1, 300),
-    lane=st.sampled_from([8, 16, 32]),
-    seed_int=st.integers(0, 2 ** 31 - 1),
-)
-@settings(max_examples=60, deadline=None)
-def test_plan_executes_exact_semantics(nnz, out_len, data_len, lane, seed_int):
-    """Property: for ANY access arrays, the specialized plan reproduces the
-    scatter-add oracle (the paper's §5 legality argument, checked)."""
-    rng = np.random.default_rng(seed_int)
-    rows = rng.integers(0, out_len, nnz)
-    cols = rng.integers(0, data_len, nnz)
-    vals = rng.standard_normal(nnz).astype(np.float32)
-    x = rng.standard_normal(data_len).astype(np.float32)
-
-    sp = SpMV.from_coo(rows, cols, vals, (out_len, data_len),
-                       lane_width=lane)
-    y = np.asarray(sp.matvec(jnp.asarray(x)))
-    yref = np.zeros(out_len, np.float64)
-    np.add.at(yref, rows, vals.astype(np.float64) * x[cols].astype(np.float64))
-    np.testing.assert_allclose(y, yref, rtol=5e-4, atol=5e-5)
-
-
-@given(
-    nnz=st.integers(1, 300),
-    lane=st.sampled_from([8, 32]),
-    seed_int=st.integers(0, 2 ** 31 - 1),
-)
-@settings(max_examples=40, deadline=None)
-def test_gather_features_are_a_valid_cover(nnz, lane, seed_int):
-    """Property: window_ids/slot/offset reconstruct the original indices."""
-    rng = np.random.default_rng(seed_int)
-    idx = rng.integers(0, 1000, nnz)
-    blocks = ft.pad_to_blocks(idx, lane, fill=int(idx[-1]))
-    gf = ft.gather_features(blocks, lane)
-    rebuilt = (gf.window_ids[np.arange(blocks.shape[0])[:, None],
-                             gf.lane_slot] * lane + gf.lane_offset)
-    np.testing.assert_array_equal(rebuilt, blocks)
-    # ls_flag == distinct aligned windows per block
-    want = [len(np.unique(b // lane)) for b in blocks]
-    np.testing.assert_array_equal(gf.num_windows, want)
-
-
-@given(
-    nnz=st.integers(1, 300),
-    out_len=st.integers(1, 40),
-    lane=st.sampled_from([8, 32]),
-    seed_int=st.integers(0, 2 ** 31 - 1),
-)
-@settings(max_examples=40, deadline=None)
-def test_reduce_features_invariants(nnz, out_len, lane, seed_int):
-    rng = np.random.default_rng(seed_int)
-    rows = rng.integers(0, out_len, nnz)
-    blocks = ft.pad_to_blocks(rows.astype(np.int64), lane, fill=-1)
-    rf = ft.reduce_features(blocks, lane)
-    b = blocks.shape[0]
-    for bi in range(b):
-        srt = np.sort(blocks[bi])
-        np.testing.assert_array_equal(rf.write_sorted[bi], srt)
-        valid = srt != -1
-        # heads = one per distinct valid value
-        assert rf.num_heads[bi] == len(np.unique(srt[valid]))
-        # op_flag covers the longest run
-        if valid.any():
-            runs = np.unique(srt[valid], return_counts=True)[1]
-            need = int(np.ceil(np.log2(runs.max()))) if runs.max() > 1 else 0
-            flag = rf.op_flag[bi]
-            assert flag == ft.FULL_REDUCE or flag >= need
-            if flag == ft.FULL_REDUCE:
-                assert len(runs) == 1 and valid.all()
-
-
-@given(seed_int=st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_pattern_hash_consistency(seed_int):
-    """Identical blocks hash identically; hash ignores per-block operands
-    (window ids) but captures the lane pattern."""
-    rng = np.random.default_rng(seed_int)
-    lane = 8
-    idx = np.tile(rng.integers(0, 64, lane), 4)       # 4 identical blocks
-    rows = np.tile(rng.integers(0, 8, lane), 4)
-    gf = ft.gather_features(idx.reshape(4, lane), lane)
-    rf = ft.reduce_features(rows.reshape(4, lane).astype(np.int64), lane)
-    h = ft.pattern_hashes(gf, rf)
-    assert len(set(h.tolist())) == 1
-    assert ft.dedup_ratio(h) == pytest.approx(0.75)
-
-
-# ------------------------------------------------------------------- oracles
 @pytest.mark.parametrize("gen", ["dense", "banded", "random", "powerlaw",
                                  "blockdiag", "qcd"])
 @pytest.mark.parametrize("lane", [8, 128])
@@ -132,6 +40,22 @@ def test_dense_is_perfect_case():
     assert st_.replaced_gather_frac == 1.0
     # every class is a stream class (identity permutation)
     assert all(c.stream for c in sp.plan.classes)
+
+
+def test_class_ranges_tile_exec_order():
+    """Class binning invariant: class block ranges tile [0, num_blocks) and
+    the fallback/vload split is contiguous (required by the fused pallas
+    sections)."""
+    m = G.power_law(2048, 8)
+    sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=32)
+    cs = sp.plan.classes
+    assert cs[0].start == 0 and cs[-1].stop == sp.plan.num_blocks
+    for a, b in zip(cs, cs[1:]):
+        assert a.stop == b.start
+    fallback_flags = [c.ls_flag == GATHER_FALLBACK for c in cs]
+    # fallback classes first, then vload — one transition at most
+    assert fallback_flags == sorted(fallback_flags, reverse=True)
 
 
 def test_pagerank_matches_reference():

@@ -1,0 +1,134 @@
+"""Hypothesis property tests for the core engine (plan invariants).
+
+Kept separate from test_core so the oracle tests still run on a bare
+environment; this module skips cleanly when hypothesis is unavailable.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import feature_table as ft
+from repro.core.apps import SpMV
+
+
+@given(
+    nnz=st.integers(1, 400),
+    out_len=st.integers(1, 64),
+    data_len=st.integers(1, 300),
+    lane=st.sampled_from([8, 16, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_executes_exact_semantics(nnz, out_len, data_len, lane, seed_int):
+    """Property: for ANY access arrays, the specialized plan reproduces the
+    scatter-add oracle (the paper's §5 legality argument, checked)."""
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    x = rng.standard_normal(data_len).astype(np.float32)
+
+    sp = SpMV.from_coo(rows, cols, vals, (out_len, data_len),
+                       lane_width=lane)
+    y = np.asarray(sp.matvec(jnp.asarray(x)))
+    yref = np.zeros(out_len, np.float64)
+    np.add.at(yref, rows, vals.astype(np.float64) * x[cols].astype(np.float64))
+    np.testing.assert_allclose(y, yref, rtol=5e-4, atol=5e-5)
+
+
+@given(
+    nnz=st.integers(1, 300),
+    lane=st.sampled_from([8, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_gather_features_are_a_valid_cover(nnz, lane, seed_int):
+    """Property: window_ids/slot/offset reconstruct the original indices."""
+    rng = np.random.default_rng(seed_int)
+    idx = rng.integers(0, 1000, nnz)
+    blocks = ft.pad_to_blocks(idx, lane, fill=int(idx[-1]))
+    gf = ft.gather_features(blocks, lane)
+    rebuilt = (gf.window_ids[np.arange(blocks.shape[0])[:, None],
+                             gf.lane_slot] * lane + gf.lane_offset)
+    np.testing.assert_array_equal(rebuilt, blocks)
+    # ls_flag == distinct aligned windows per block
+    want = [len(np.unique(b // lane)) for b in blocks]
+    np.testing.assert_array_equal(gf.num_windows, want)
+
+
+@given(
+    nnz=st.integers(1, 300),
+    out_len=st.integers(1, 40),
+    lane=st.sampled_from([8, 32]),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_reduce_features_invariants(nnz, out_len, lane, seed_int):
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    blocks = ft.pad_to_blocks(rows.astype(np.int64), lane, fill=-1)
+    rf = ft.reduce_features(blocks, lane)
+    b = blocks.shape[0]
+    for bi in range(b):
+        srt = np.sort(blocks[bi])
+        np.testing.assert_array_equal(rf.write_sorted[bi], srt)
+        valid = srt != -1
+        # heads = one per distinct valid value
+        assert rf.num_heads[bi] == len(np.unique(srt[valid]))
+        # op_flag covers the longest run
+        if valid.any():
+            runs = np.unique(srt[valid], return_counts=True)[1]
+            need = int(np.ceil(np.log2(runs.max()))) if runs.max() > 1 else 0
+            flag = rf.op_flag[bi]
+            assert flag == ft.FULL_REDUCE or flag >= need
+            if flag == ft.FULL_REDUCE:
+                assert len(runs) == 1 and valid.all()
+
+
+@given(seed_int=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pattern_hash_consistency(seed_int):
+    """Identical blocks hash identically; hash ignores per-block operands
+    (window ids) but captures the lane pattern."""
+    rng = np.random.default_rng(seed_int)
+    lane = 8
+    idx = np.tile(rng.integers(0, 64, lane), 4)       # 4 identical blocks
+    rows = np.tile(rng.integers(0, 8, lane), 4)
+    gf = ft.gather_features(idx.reshape(4, lane), lane)
+    rf = ft.reduce_features(rows.reshape(4, lane).astype(np.int64), lane)
+    h = ft.pattern_hashes(gf, rf)
+    assert len(set(h.tolist())) == 1
+    assert ft.dedup_ratio(h) == pytest.approx(0.75)
+
+
+@given(
+    nnz=st.integers(1, 500),
+    out_len=st.integers(1, 48),
+    data_len=st.integers(1, 256),
+    seed_int=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_fused_bitwise_equals_per_class_property(nnz, out_len, data_len,
+                                                 seed_int):
+    """Property: the fused executor is bitwise-equal to the per-class path
+    on ANY random COO matrix (jax backend; see test_fused for the backend
+    × reduce sweep)."""
+    from repro.core import engine as eng
+    from repro.core.plan import build_plan, CostModel
+    from repro.core.seed import spmv_seed
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    x = rng.standard_normal(data_len).astype(np.float32)
+    plan = build_plan(spmv_seed(), {"row": rows, "col": cols},
+                      out_len, data_len, CostModel(lane_width=16))
+    y0 = jnp.zeros(out_len, jnp.float32)
+    run_pc = eng.make_executor(plan, {"value": vals}, fused=False)
+    run_fz = eng.make_executor(plan, {"value": vals}, fused=True)
+    y_pc = np.asarray(run_pc({"x": jnp.asarray(x)}, y0))
+    y_fz = np.asarray(run_fz({"x": jnp.asarray(x)}, y0))
+    np.testing.assert_array_equal(y_pc, y_fz)

@@ -41,6 +41,7 @@ def test_spmm_consistent_with_spmv():
 
 
 def test_plan_save_load_roundtrip(tmp_path):
+    pytest.importorskip("msgpack")
     m = G.power_law(512, 6)
     sp = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
                        np.asarray(m.vals), m.shape, lane_width=32)

@@ -1,0 +1,239 @@
+"""Fused-executor and vectorized-plan-builder tests.
+
+* fused stage A is bitwise-equal to the per-class path on random COO
+  matrices — jax, pallas, and (allclose; different reduction order by
+  design) the segsum backend, for add and max reduces,
+* the vectorized ``pattern_hashes`` gives the identical dedup_ratio and
+  class grouping as the per-block blake2b oracle on fixed seeds,
+* the content-addressed plan cache returns byte-identical plans that
+  execute identically,
+* the dense fused write-back matches the gather write-back bitwise.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng
+from repro.core import feature_table as ft
+from repro.core.plan import build_plan, CostModel
+from repro.core.seed import CodeSeed, spmv_seed
+from repro.sparse import generators as G
+
+
+def _random_coo(seed_int, nnz=900, out_len=70, data_len=300):
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    x = rng.standard_normal(data_len).astype(np.float32)
+    return rows, cols, vals, x, out_len, data_len
+
+
+def _seed_for(reduce):
+    return CodeSeed(name="t", output="y", out_index="row",
+                    gather_index="col", gathered=("x",),
+                    elementwise=("value",),
+                    combine=lambda v: v["value"] * v["x"], reduce=reduce)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas", "segsum"])
+@pytest.mark.parametrize("reduce", ["add", "max"])
+@pytest.mark.parametrize("seed_int", [0, 7, 123])
+def test_fused_matches_per_class(backend, reduce, seed_int):
+    """Fused stage A vs per-class on random COO: bitwise for jax/pallas
+    (same float ops in the same order — DESIGN.md §3), allclose for segsum
+    (a different, linear reduction order by construction)."""
+    if backend == "segsum" and reduce != "add":
+        pytest.skip("segsum backend is add-only")
+    rows, cols, vals, x, out_len, data_len = _random_coo(seed_int)
+    seed = _seed_for(reduce)
+    plan = build_plan(seed, {"row": rows, "col": cols}, out_len, data_len,
+                      CostModel(lane_width=16))
+    init = jnp.full((out_len,), seed.reduce_identity, jnp.float32)
+    run_pc = eng.make_executor(plan, {"value": vals}, backend="jax",
+                               fused=False)
+    y_pc = np.asarray(run_pc({"x": jnp.asarray(x)}, init))
+    run = eng.make_executor(plan, {"value": vals}, backend=backend,
+                            fused=True)
+    y = np.asarray(run({"x": jnp.asarray(x)}, init))
+    if backend == "segsum":
+        np.testing.assert_allclose(y, y_pc, rtol=1e-5, atol=1e-6)
+    else:
+        np.testing.assert_array_equal(y, y_pc)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_fused_matches_per_class_same_backend(backend, seed_int=42):
+    """Bitwise parity within one backend (fused vs per-class launches)."""
+    rows, cols, vals, x, out_len, data_len = _random_coo(seed_int)
+    plan = build_plan(spmv_seed(), {"row": rows, "col": cols},
+                      out_len, data_len, CostModel(lane_width=16))
+    init = jnp.zeros(out_len, jnp.float32)
+    ys = []
+    for fused in (False, True):
+        run = eng.make_executor(plan, {"value": vals}, backend=backend,
+                                fused=fused)
+        ys.append(np.asarray(run({"x": jnp.asarray(x)}, init)))
+    np.testing.assert_array_equal(ys[0], ys[1])
+
+
+def test_fused_on_structured_families():
+    """Fused == per-class bitwise across the generator families (multi-
+    class, stream, FULL_REDUCE, and fallback plans all appear here)."""
+    rng = np.random.default_rng(0)
+    for m in [G.dense(64), G.banded(512, 5), G.power_law(1024, 8),
+              G.stencil_qcd(16)]:
+        plan = build_plan(spmv_seed(),
+                          {"row": np.asarray(m.rows),
+                           "col": np.asarray(m.cols)},
+                          m.shape[0], m.shape[1], CostModel(lane_width=32))
+        x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+        init = jnp.zeros(m.shape[0], jnp.float32)
+        outs = []
+        for fused in (False, True):
+            run = eng.make_executor(plan, {"value": np.asarray(m.vals)},
+                                    fused=fused)
+            outs.append(np.asarray(run({"x": x}, init)))
+        np.testing.assert_array_equal(outs[0], outs[1], err_msg=m.name)
+
+
+def test_stage_b_dense_matches_gather():
+    """The dense-head-buffer write-back matches the collision-free gather
+    write-back (allclose: the dense scatter carries duplicate row indices,
+    whose accumulation order XLA does not pin down across programs)."""
+    rows, cols, vals, x, out_len, data_len = _random_coo(3)
+    plan = build_plan(spmv_seed(), {"row": rows, "col": cols},
+                      out_len, data_len, CostModel(lane_width=16))
+    init = jnp.zeros(out_len, jnp.float32)
+    ys = []
+    for stage_b in ("gather", "dense"):
+        run = eng.make_executor(plan, {"value": vals}, fused=True,
+                                stage_b=stage_b)
+        ys.append(np.asarray(run({"x": jnp.asarray(x)}, init)))
+    np.testing.assert_allclose(ys[0], ys[1], rtol=1e-5, atol=1e-6)
+
+
+def test_fused_xla_classes_collapse_and_cover():
+    """Fused launch list invariants: covers [0, B) contiguously, one group
+    per op run, and fragmented plans actually collapse."""
+    m = G.power_law(2048, 8)
+    plan = build_plan(spmv_seed(),
+                      {"row": np.asarray(m.rows), "col": np.asarray(m.cols)},
+                      m.shape[0], m.shape[1], CostModel(lane_width=128))
+    groups = eng.fused_xla_classes(plan)
+    assert groups[0].start == 0 and groups[-1].stop == plan.num_blocks
+    for a, b in zip(groups, groups[1:]):
+        assert a.stop == b.start
+    if len(plan.classes) > eng._FUSE_MIN_CLASSES:
+        assert len(groups) < len(plan.classes)
+    secs = eng.fused_sections(plan)
+    assert 1 <= len(secs) <= 2
+    assert secs[0].start == 0 and secs[-1].stop == plan.num_blocks
+
+
+# ------------------------------------------------- vectorized hash regression
+@pytest.mark.parametrize("seed_int", [0, 1, 2026])
+@pytest.mark.parametrize("lane", [8, 32])
+def test_pattern_hashes_match_blake2b_grouping(seed_int, lane):
+    """The vectorized mixing hash must induce the identical block grouping
+    and dedup_ratio as the per-block blake2b oracle."""
+    rng = np.random.default_rng(seed_int)
+    nnz = 4096
+    # half random, half tiled so real duplicates exist
+    idx = np.concatenate([rng.integers(0, 512, nnz // 2),
+                          np.tile(rng.integers(0, 64, lane), nnz // 2 // lane)])
+    rows = np.concatenate([rng.integers(0, 128, nnz // 2),
+                           np.tile(rng.integers(0, 8, lane),
+                                   nnz // 2 // lane)])
+    gf = ft.gather_features(ft.pad_to_blocks(idx, lane, fill=0), lane)
+    rf = ft.reduce_features(ft.pad_to_blocks(rows.astype(np.int64), lane,
+                                             fill=-1), lane)
+    h_vec = ft.pattern_hashes(gf, rf)
+    h_ref = ft.pattern_hashes_blake2b(gf, rf)
+
+    def grouping(h):
+        first = {}
+        out = np.empty(h.size, np.int64)
+        for i, v in enumerate(h.tolist()):
+            out[i] = first.setdefault(v, i)
+        return out
+
+    np.testing.assert_array_equal(grouping(h_vec), grouping(h_ref))
+    assert ft.dedup_ratio(h_vec) == pytest.approx(ft.dedup_ratio(h_ref))
+    assert ft.dedup_ratio(h_vec) > 0.2   # the tiled half actually dedups
+
+
+def test_build_plan_has_no_per_block_python_loops():
+    """Guard: class binning must match an independent per-block recompute
+    (the vectorized np.unique path vs the old zip/dict semantics)."""
+    m = G.power_law(1024, 8)
+    plan = build_plan(spmv_seed(),
+                      {"row": np.asarray(m.rows), "col": np.asarray(m.cols)},
+                      m.shape[0], m.shape[1], CostModel(lane_width=16))
+    # reconstruct histograms per block from the exec-order class table
+    total = sum(c.num_blocks for c in plan.classes)
+    assert total == plan.num_blocks
+    assert abs(sum(plan.stats.ls_hist.values()) - 1.0) < 1e-9
+    assert abs(sum(plan.stats.op_hist.values()) - 1.0) < 1e-9
+
+
+# ----------------------------------------------------------------- plan cache
+def test_plan_cache_roundtrip(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.core import planio
+    m = G.power_law(1024, 8)
+    access = {"row": np.asarray(m.rows), "col": np.asarray(m.cols)}
+    cost = CostModel(lane_width=32)
+    p1 = planio.cached_build_plan(spmv_seed(), access, m.shape[0],
+                                  m.shape[1], cost, cache_dir=str(tmp_path))
+    assert len(list(tmp_path.iterdir())) == 1
+    p2 = planio.cached_build_plan(spmv_seed(), access, m.shape[0],
+                                  m.shape[1], cost, cache_dir=str(tmp_path))
+    for k in ("window_ids", "lane_slot", "lane_offset", "seg_ids",
+              "gather_idx", "flat_perm", "head_pos", "head_rows"):
+        np.testing.assert_array_equal(getattr(p1, k), getattr(p2, k))
+    assert [c.key for c in p1.classes] == [c.key for c in p2.classes]
+    # cached plan executes identically
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        m.shape[1]).astype(np.float32))
+    init = jnp.zeros(m.shape[0], jnp.float32)
+    y1 = np.asarray(eng.make_executor(p1, {"value": np.asarray(m.vals)})(
+        {"x": x}, init))
+    y2 = np.asarray(eng.make_executor(p2, {"value": np.asarray(m.vals)})(
+        {"x": x}, init))
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_plan_cache_key_sensitivity(tmp_path):
+    pytest.importorskip("msgpack")
+    from repro.core import planio
+    m = G.banded(256, 3)
+    access = {"row": np.asarray(m.rows), "col": np.asarray(m.cols)}
+    cost = CostModel(lane_width=16)
+    d0 = planio.plan_digest("spmv", access, m.shape[0], m.shape[1], cost)
+    # content change -> new key
+    mod = dict(access)
+    mod["col"] = access["col"].copy()
+    mod["col"][5] += 1
+    assert planio.plan_digest("spmv", mod, m.shape[0], m.shape[1],
+                              cost) != d0
+    # permutation change -> new key (position-sensitive fingerprint)
+    perm = dict(access)
+    perm["col"] = access["col"][::-1].copy()
+    assert planio.plan_digest("spmv", perm, m.shape[0], m.shape[1],
+                              cost) != d0
+    # cost model change -> new key
+    assert planio.plan_digest("spmv", access, m.shape[0], m.shape[1],
+                              CostModel(lane_width=32)) != d0
+
+
+def test_plan_cache_falls_through_for_unregistered_seed(tmp_path):
+    from repro.core import planio
+    rows, cols, vals, x, out_len, data_len = _random_coo(1)
+    plan = planio.cached_build_plan(_seed_for("add"),
+                                    {"row": rows, "col": cols},
+                                    out_len, data_len,
+                                    CostModel(lane_width=16),
+                                    cache_dir=str(tmp_path))
+    assert plan.nnz == rows.shape[0]
+    assert list(tmp_path.iterdir()) == []   # nothing cached, no crash

@@ -57,6 +57,7 @@ def test_adamw_quantized_moments_track_full():
 
 # --------------------------------------------------------------- checkpoint
 def test_checkpoint_roundtrip_and_gc(tmp_path):
+    pytest.importorskip("zstandard")  # checkpoint codec
     d = str(tmp_path)
     tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
             "b": {"c": jnp.asarray([1, 2, 3], jnp.int32),
@@ -74,6 +75,7 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
 
 def test_checkpoint_elastic_restore_reshards(tmp_path):
     """Restore onto a different sharding layout (elastic scaling)."""
+    pytest.importorskip("zstandard")  # checkpoint codec
     from jax.sharding import NamedSharding, PartitionSpec as PS
     from repro.launch.mesh import make_local_mesh
     d = str(tmp_path)
@@ -89,6 +91,7 @@ def test_checkpoint_elastic_restore_reshards(tmp_path):
 
 # --------------------------------------------------------------- train loop
 def test_train_loss_decreases_and_resume_exact(tmp_path):
+    pytest.importorskip("zstandard")  # checkpoint codec
     cfg = get_config("granite_3_2b").reduced().replace(num_layers=2)
     tc = TrainConfig(steps=30, batch=4, seq=32, ckpt_every=15,
                      ckpt_dir=str(tmp_path), log_every=100,
@@ -111,6 +114,7 @@ def test_train_loss_decreases_and_resume_exact(tmp_path):
 
 
 def test_train_preemption_checkpoints(tmp_path):
+    pytest.importorskip("zstandard")  # checkpoint codec
     cfg = get_config("granite_3_2b").reduced().replace(num_layers=1)
     tc = TrainConfig(steps=100, batch=2, seq=16, ckpt_every=1000,
                      ckpt_dir=str(tmp_path), log_every=1000,
