@@ -1,0 +1,94 @@
+"""Graph-application benchmarks: BFS / SSSP / CC per backend per graph class.
+
+Each row times one (app, backend, graph) cell of the paper's §7 graph
+evaluation: plan-build seconds (paid once per graph), per-sweep microseconds
+(the steady-state cost the paper's amortization argument buys), and the
+sweeps-to-convergence of the fixpoint driver.  ``plan_builds`` is asserted
+to be exactly 1 per app instance — the convergence driver must never
+rebuild a plan between sweeps.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graphs as GR
+from repro.sparse import generators as G
+
+APPS = ("bfs", "sssp", "cc")
+
+
+def _build(app: str, case, backend: str, lane_width: int):
+    if app == "bfs":
+        return GR.BFS.from_edges(case.src, case.dst, case.num_nodes,
+                                 lane_width=lane_width, backend=backend)
+    if app == "sssp":
+        return GR.SSSP.from_edges(case.src, case.dst, case.weight,
+                                  case.num_nodes, lane_width=lane_width,
+                                  backend=backend)
+    return GR.ConnectedComponents.from_edges(case.src, case.dst,
+                                             case.num_nodes,
+                                             lane_width=lane_width,
+                                             backend=backend)
+
+
+def _initial_state(app: str, inst) -> jnp.ndarray:
+    if app == "bfs":
+        return inst._init_levels(np.asarray([0]))[0]
+    if app == "sssp":
+        d = np.full(inst.num_nodes, np.inf, np.float32)
+        d[0] = 0.0
+        return jnp.asarray(d)
+    return jnp.arange(inst.num_nodes, dtype=jnp.int32)
+
+
+def _time_sweep(inst, state, reps: int = 30) -> float:
+    inst.sweep(state).block_until_ready()          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        inst.sweep(state).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_graph_apps(scale: str = "small",
+                     backends: tuple = ("jax", "segsum"),
+                     pallas: bool = False,
+                     lane_width: int = 128) -> list[dict]:
+    """One row per (app, backend, graph class) — the BENCH_graph payload."""
+    backends = tuple(backends) + (("pallas",) if pallas else ())
+    rows = []
+    for case in G.graph_suite(scale):
+        # full convergence on the ring is diameter-bound (O(n) sweeps);
+        # cap the convergence measurement so the bench stays small
+        max_sweeps = 64 if case.name == "ring" else None
+        for backend in backends:
+            for app in APPS:
+                before = GR.plan_build_count()
+                t0 = time.perf_counter()
+                inst = _build(app, case, backend, lane_width)
+                build_s = time.perf_counter() - t0
+                builds = GR.plan_build_count() - before
+                assert builds == 1, (app, case.name, builds)
+                state = _initial_state(app, inst)
+                us = _time_sweep(inst, state,
+                                 reps=5 if backend == "pallas" else 30)
+                inst._converge(state, max_sweeps)
+                rows.append({
+                    "bench": "graph",
+                    "app": app,
+                    "backend": backend,
+                    "dataset": case.name,
+                    "num_nodes": case.num_nodes,
+                    "num_edges": case.num_edges,
+                    "us_per_sweep": round(us, 1),
+                    "sweeps_run": inst.sweeps_run,
+                    # False when the max_sweeps cap truncated the run
+                    # (the diameter-bound ring): sweeps_run is then the
+                    # cap, not a convergence statistic
+                    "converged": inst.converged,
+                    "plan_build_s": round(build_s, 4),
+                    "plan_builds": builds,
+                })
+    return rows

@@ -7,6 +7,10 @@ trajectory (backend x dataset x fused/per-class ``us_per_call`` plus
 plan-build seconds) — the file checked in as ``BENCH_spmv.json``.
 
 ``python -m benchmarks.run [--scale full] [--pallas] [--json out.json]``
+
+``--graphs`` switches to the graph-application mode (BFS / SSSP / CC per
+backend per graph class, the paper's §7 graph side); its ``--json`` output
+is the file checked in as ``BENCH_graph.json``.
 """
 from __future__ import annotations
 
@@ -16,11 +20,52 @@ import platform
 import sys
 
 
+def _platform_info() -> dict:
+    import jax
+    return {
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+    }
+
+
+def _write_json(path: str, schema: str, scale: str, rows: list) -> None:
+    payload = {
+        "schema": schema,
+        "scale": scale,
+        "platform": _platform_info(),
+        "timings": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"json_written,0,{path}", file=sys.stderr)
+
+
+def run_graph_mode(args) -> None:
+    """Graph-application benchmark mode: emits BENCH_graph.json rows."""
+    from benchmarks.graph_apps import bench_graph_apps
+
+    print("name,us_per_call,derived")
+    rows = bench_graph_apps(scale=args.scale, pallas=args.pallas)
+    for r in rows:
+        print(f"graph_{r['dataset']}_{r['app']}_{r['backend']},"
+              f"{r['us_per_sweep']:.1f},"
+              f"sweeps={r['sweeps_run']};converged={r['converged']};"
+              f"build={r['plan_build_s']}s;plan_builds={r['plan_builds']}")
+    if args.json:
+        _write_json(args.json, "bench_graph.v1", args.scale, rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "full"])
     ap.add_argument("--pallas", action="store_true",
                     help="also time the Pallas-interpret backend (slow)")
+    ap.add_argument("--graphs", action="store_true",
+                    help="graph-application mode (BFS/SSSP/CC; "
+                         "BENCH_graph.json)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable timings (BENCH_*.json)")
     args = ap.parse_args()
@@ -28,6 +73,9 @@ def main() -> None:
         # fail on an unwritable path now, not after minutes of timing
         with open(args.json, "a"):
             pass
+    if args.graphs:
+        run_graph_mode(args)
+        return
     from benchmarks import paper_tables as T
 
     print("name,us_per_call,derived")
@@ -83,22 +131,8 @@ def main() -> None:
         print(f"{name},0,mean_windows={mean_w:.2f};frac_ls<=2={ls12:.2f}")
 
     if args.json:
-        import jax
-        payload = {
-            "schema": "bench_spmv.v1",
-            "scale": args.scale,
-            "platform": {
-                "machine": platform.machine(),
-                "python": platform.python_version(),
-                "jax": jax.__version__,
-                "device": jax.devices()[0].platform,
-            },
-            "timings": exec_rows + build_rows,
-        }
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-            f.write("\n")
-        print(f"json_written,0,{args.json}", file=sys.stderr)
+        _write_json(args.json, "bench_spmv.v1", args.scale,
+                    exec_rows + build_rows)
 
     # ---- roofline table from dry-run artifacts (if present)
     try:

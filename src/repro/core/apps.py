@@ -6,6 +6,9 @@
 * :class:`PageRank` — edge-push power iteration (paper Alg. 4); one plan for
   the whole run, reused every sweep, exactly the amortization the paper's
   runtime JIT relies on.
+* :class:`BFS` / :class:`SSSP` / :class:`ConnectedComponents` — the graph
+  applications (non-add semirings), re-exported from
+  :mod:`repro.core.graphs`.
 """
 from __future__ import annotations
 
@@ -121,3 +124,9 @@ def pagerank_reference(src: np.ndarray, dst: np.ndarray, num_nodes: int,
         rank = (1 - damping) / num_nodes + damping * (
             contrib + dangling_mass / num_nodes)
     return rank
+
+
+# graph applications live in their own module; re-exported here so callers
+# have one `repro.core.apps` entry point for every paper §7 workload.
+from repro.core.graphs import (BFS, SSSP,  # noqa: E402,F401
+                               ConnectedComponents)

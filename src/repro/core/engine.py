@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.core import feature_table as ft
 from repro.core.plan import GATHER_FALLBACK, BlockPlan, PatternClass
-from repro.core.seed import CodeSeed, reference_execute
+from repro.core.seed import (CodeSeed, reduce_identity_for,
+                             reference_execute)
 
 _SEG_PAD = -(2 ** 30)
 
@@ -51,11 +52,15 @@ def _padded_view_len(data_len: int, n: int) -> int:
 
 
 def reorder_elementwise(plan: BlockPlan, arr: np.ndarray | jnp.ndarray,
-                        identity: float = 0.0) -> jnp.ndarray:
+                        identity: float | None = None,
+                        reduce: str = "add") -> jnp.ndarray:
     """Data Transfer: physically reorder an nnz-aligned immutable array into
     exec order (class-sorted blocks, in-block write-sorted), padding with the
-    reduce identity. Returns (B, N)."""
+    reduce identity *in the array's dtype* (DESIGN.md §3a — a float ``inf``
+    pad on an int array is an invalid cast). Returns (B, N)."""
     arr = jnp.asarray(arr)
+    if identity is None:
+        identity = reduce_identity_for(reduce, arr.dtype)
     padded = jnp.concatenate(
         [arr, jnp.full((1,) + arr.shape[1:], identity, arr.dtype)])
     flat = padded[jnp.asarray(np.minimum(plan.flat_perm, plan.nnz))]
@@ -73,12 +78,16 @@ def _pad_gathered(plan: BlockPlan, g: jnp.ndarray) -> jnp.ndarray:
 
 
 def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
-                     reduce: str, identity: float) -> jnp.ndarray:
+                     reduce: str, identity: float | None = None
+                     ) -> jnp.ndarray:
     """§5: log-step masked shift-reduce.  ``op_flag`` static steps; runs are
     consecutive (the Data Transfer sort guarantees it); after the loop each
-    segment's *head lane* holds the full segment reduction."""
+    segment's *head lane* holds the full segment reduction.  The shift pad
+    identity is derived from ``term.dtype`` unless given (DESIGN.md §3a)."""
     from repro.core.seed import REDUCE_OPS
     op, _ = REDUCE_OPS[reduce]
+    if identity is None:
+        identity = reduce_identity_for(reduce, term.dtype)
     bc, n = term.shape
     if op_flag == ft.FULL_REDUCE:
         # paper: single-segment block -> architecture-native reduction.  On
@@ -249,7 +258,7 @@ def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
             vals[e] = elem_exec[e][s]
         term = seed.combine(vals)
         red = segmented_reduce(term, meta["seg_ids"][s], c.op_flag,
-                               seed.reduce, seed.reduce_identity)
+                               seed.reduce)
         parts.append(red)
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
@@ -268,7 +277,8 @@ def _stage_b(plan: BlockPlan, meta, lanes: jnp.ndarray,
     seed = plan.seed
     seg = meta["head_row_seg"]
     from repro.core.seed import REDUCE_OPS
-    op, identity = REDUCE_OPS[seed.reduce]
+    op, _ = REDUCE_OPS[seed.reduce]
+    identity = reduce_identity_for(seed.reduce, hv.dtype)
     for k in range(int(meta["head_tree_depth"])):
         d = 1 << k
         shifted = jnp.pad(hv[d:], (0, d), constant_values=identity)
@@ -326,6 +336,7 @@ def _stage_b_dense(plan: BlockPlan, meta, lanes: jnp.ndarray,
     flat = lanes.reshape(-1)
     seed = plan.seed
     n_out = plan.out_len
+    identity = reduce_identity_for(seed.reduce, flat.dtype)
     if seed.reduce == "add":
         acc = jnp.zeros(n_out + 1, flat.dtype).at[rows].add(flat)
         return out_init + acc[:n_out]
@@ -333,9 +344,9 @@ def _stage_b_dense(plan: BlockPlan, meta, lanes: jnp.ndarray,
         acc = jnp.ones(n_out + 1, flat.dtype).at[rows].multiply(flat)
         return out_init * acc[:n_out]
     if seed.reduce == "max":
-        acc = jnp.full(n_out + 1, -jnp.inf, flat.dtype).at[rows].max(flat)
+        acc = jnp.full(n_out + 1, identity, flat.dtype).at[rows].max(flat)
         return jnp.maximum(out_init, acc[:n_out])
-    acc = jnp.full(n_out + 1, jnp.inf, flat.dtype).at[rows].min(flat)
+    acc = jnp.full(n_out + 1, identity, flat.dtype).at[rows].min(flat)
     return jnp.minimum(out_init, acc[:n_out])
 
 
@@ -360,7 +371,7 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         fused = fuse_classes
     seed = plan.seed
     elem_exec = {e: reorder_elementwise(plan, static_data[e],
-                                        seed.reduce_identity)
+                                        reduce=seed.reduce)
                  for e in seed.elementwise}
     meta = {
         "window_ids": jnp.asarray(plan.window_ids),
@@ -396,10 +407,14 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     if backend == "segsum":
         # CPU-optimal configuration of the same plan: the Data Transfer
         # sort already made (block, row) runs consecutive, so stage A+B
-        # collapse into ONE sorted segment-sum straight into y.  On
+        # collapse into ONE sorted segment reduce straight into y.  On
         # register-rich targets (TPU VMEM / AVX-512) the log-shift path
         # wins; on XLA-CPU each shift step round-trips memory and this
         # form is strictly better (see EXPERIMENTS §Perf iteration log).
+        # All four semiring reduces map onto jax.ops.segment_{sum,prod,
+        # max,min}; empty segments (rows with no nnz, plus the discard
+        # bucket at out_len) come back as the dtype-aware identity, so
+        # folding into out_init with the reduce op leaves them untouched.
         # global output row per exec lane (pads -> bucket out_len):
         # scatter each head's row onto its (block, segment), then read it
         # back per lane — runs are consecutive post-sort.
@@ -414,6 +429,13 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         rows_j = jnp.asarray(lane_rows.reshape(-1), jnp.int32)
         gidx_j = jnp.asarray(plan.gather_idx.reshape(-1), jnp.int32)
 
+        seg_reduce = {"add": jax.ops.segment_sum,
+                      "mul": jax.ops.segment_prod,
+                      "max": jax.ops.segment_max,
+                      "min": jax.ops.segment_min}[seed.reduce]
+        from repro.core.seed import REDUCE_OPS
+        fold = REDUCE_OPS[seed.reduce][0]
+
         @jax.jit
         def run_ss(mutable, out_init):
             vals = {}
@@ -422,11 +444,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
             for e in seed.elementwise:
                 vals[e] = elem_exec[e].reshape(-1)
             term = seed.combine(vals)
-            summed = jax.ops.segment_sum(term, rows_j,
-                                         num_segments=plan.out_len + 1)
-            if seed.reduce != "add":
-                raise NotImplementedError("segsum backend: add only")
-            return out_init + summed[:plan.out_len]
+            red = seg_reduce(term, rows_j, num_segments=plan.out_len + 1)
+            return fold(out_init, red[:plan.out_len])
         return run_ss
 
     if backend == "pallas":

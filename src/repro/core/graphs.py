@@ -1,0 +1,310 @@
+"""Graph applications on the Intelligent-Unroll semiring engine (paper §7).
+
+The paper's headline evaluation is "SpMV and graph applications" (Alg. 4):
+this module supplies the graph side.  Each application is one
+:class:`~repro.core.seed.CodeSeed` over the edge list, executed through the
+plan/fused-executor stack, and each exercises a *non-add* reduce:
+
+* :class:`BFS` — frontier-free level relaxation, ``min`` reduce over int32
+  levels (``level[dst] = min(level[dst], level[src] + 1)``),
+* :class:`SSSP` — Bellman-Ford over the (min, +) semiring
+  (``dist[dst] = min(dist[dst], dist[src] + w)``),
+* :class:`ConnectedComponents` — min-label propagation over the
+  symmetrized edge list (``label[dst] = min(label[dst], label[src])``).
+
+All three share one amortization story (the paper's runtime-JIT argument):
+the plan is a pure function of the immutable edge list, built ONCE in
+``from_edges`` and reused by every sweep of the convergence driver —
+``plan_build_count()`` lets tests and benchmarks assert exactly that.
+The sweep itself is the same jitted executor the SpMV path uses, so every
+backend (XLA / segsum / Pallas) and both write-backs run graph workloads.
+
+A sweep folds into ``out_init`` (the previous state), so rows with no
+incoming edge keep their value and a fixpoint is exact array equality —
+the convergence check needs no tolerance, including for float SSSP
+(Bellman-Ford reaches its fixpoint in at most ``num_nodes`` synchronous
+sweeps; each value is a finite min over path sums).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.plan import BlockPlan, CostModel, build_plan
+from repro.core.seed import CodeSeed
+
+# int32 "infinity" for BFS levels / CC labels of unreached nodes: large
+# enough to dominate every real level (< num_nodes), small enough that
+# ``UNREACHED + 1`` in the combine can never wrap int32 (the reduce
+# *identity* iinfo(int32).max is reserved for pad lanes, which are never
+# fed back into a combine).
+UNREACHED = np.int32(1 << 30)
+
+_plan_builds = 0
+
+
+def plan_build_count() -> int:
+    """Total ``build_plan`` invocations made by this module — benchmarks
+    and tests assert one per graph across all sweeps (plan reuse)."""
+    return _plan_builds
+
+
+def _build(seed: CodeSeed, access, out_len, data_len, cost,
+           plan_cache_dir) -> BlockPlan:
+    global _plan_builds
+    _plan_builds += 1
+    if plan_cache_dir is None:
+        return build_plan(seed, access, out_len, data_len, cost=cost)
+    from repro.core import planio
+    return planio.cached_build_plan(seed, access, out_len, data_len,
+                                    cost=cost, cache_dir=plan_cache_dir)
+
+
+def bfs_seed() -> CodeSeed:
+    """Level relaxation: ``level[dst] = min(level[dst], level[src] + 1)``."""
+    return CodeSeed(name="bfs_relax", output="level", out_index="dst",
+                    gather_index="src", gathered=("level",),
+                    elementwise=(),
+                    combine=lambda v: v["level"] + 1,
+                    reduce="min")
+
+
+def sssp_seed() -> CodeSeed:
+    """(min, +) semiring edge relaxation (Bellman-Ford inner loop)."""
+    return CodeSeed(name="sssp_relax", output="dist", out_index="dst",
+                    gather_index="src", gathered=("dist",),
+                    elementwise=("weight",),
+                    combine=lambda v: v["dist"] + v["weight"],
+                    reduce="min")
+
+
+def cc_seed() -> CodeSeed:
+    """Min-label propagation: ``label[dst] = min(label[dst], label[src])``."""
+    return CodeSeed(name="cc_propagate", output="label", out_index="dst",
+                    gather_index="src", gathered=("label",),
+                    elementwise=(),
+                    combine=lambda v: v["label"],
+                    reduce="min")
+
+
+@dataclasses.dataclass
+class _FixpointApp:
+    """Shared convergence driver: one plan, one jitted sweep, iterate the
+    sweep until exact fixpoint (or ``max_sweeps``)."""
+
+    plan: BlockPlan
+    num_nodes: int
+    _run: object
+    _state_key: str
+    sweeps_run: int = 0
+    converged: bool = False
+
+    def sweep(self, state: jnp.ndarray) -> jnp.ndarray:
+        """One relaxation pass folded into the previous state."""
+        return self._run({self._state_key: state}, state)
+
+    def _converge(self, state: jnp.ndarray, max_sweeps: int | None,
+                  step=None) -> jnp.ndarray:
+        """Iterate ``step`` (default: one sweep) to exact fixpoint.
+        ``sweeps_run``/``converged`` record how the run ended — a run that
+        exhausts ``max_sweeps`` without reaching a fixpoint reports
+        ``converged=False``."""
+        if step is None:
+            step = self.sweep
+        if max_sweeps is None:
+            max_sweeps = self.num_nodes + 1
+        self.sweeps_run = 0
+        self.converged = False
+        for _ in range(max_sweeps):
+            new = step(state)
+            self.sweeps_run += 1
+            if bool(jnp.array_equal(new, state)):
+                self.converged = True
+                return new
+            state = new
+        return state
+
+
+def _executor_kwargs(backend, fused, stage_b, interpret):
+    kw = dict(backend=backend, fused=fused, stage_b=stage_b)
+    if backend == "pallas":
+        kw["interpret"] = interpret
+    return kw
+
+
+@dataclasses.dataclass
+class BFS(_FixpointApp):
+    """Breadth-first levels via min-reduce relaxation over int32.
+
+    Unit-weight Bellman-Ford: each sweep relaxes every edge at once, so
+    after ``k`` sweeps all nodes within ``k`` hops hold exact levels;
+    convergence takes eccentricity+1 sweeps.  Unreached nodes return -1.
+    """
+
+    @classmethod
+    def from_edges(cls, src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                   lane_width: int = 128, backend: str = "jax",
+                   cost: CostModel | None = None, fused: bool = True,
+                   stage_b: str = "auto", interpret: bool | None = None,
+                   plan_cache_dir: str | None = None) -> "BFS":
+        seed = bfs_seed()
+        cost = cost or CostModel(lane_width=lane_width)
+        plan = _build(seed, {"dst": np.asarray(dst), "src": np.asarray(src)},
+                      num_nodes, num_nodes, cost, plan_cache_dir)
+        run = eng.make_executor(plan, {}, **_executor_kwargs(
+            backend, fused, stage_b, interpret))
+        return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                   _state_key="level")
+
+    def _init_levels(self, sources: np.ndarray) -> jnp.ndarray:
+        lv = np.full((sources.shape[0], self.num_nodes), UNREACHED, np.int32)
+        lv[np.arange(sources.shape[0]), sources] = 0
+        return jnp.asarray(lv)
+
+    def run(self, source: int, max_sweeps: int | None = None) -> np.ndarray:
+        """Levels from ``source`` (int32; -1 where unreachable)."""
+        state = self._init_levels(np.asarray([source]))[0]
+        state = self._converge(state, max_sweeps)
+        lv = np.asarray(state)
+        return np.where(lv >= UNREACHED, -1, lv).astype(np.int32)
+
+    def run_multi(self, sources, max_sweeps: int | None = None) -> np.ndarray:
+        """Batched multi-source BFS: one ``vmap``-ed sweep over all sources
+        simultaneously — S plans' worth of work from ONE plan and one jitted
+        program (XLA backend).  Returns (S, num_nodes) levels, -1 where
+        unreachable."""
+        sources = np.asarray(sources)
+        state = self._converge(self._init_levels(sources), max_sweeps,
+                               step=jax.vmap(self.sweep))
+        lv = np.asarray(state)
+        return np.where(lv >= UNREACHED, -1, lv).astype(np.int32)
+
+
+@dataclasses.dataclass
+class SSSP(_FixpointApp):
+    """Single-source shortest paths (Bellman-Ford, (min, +) semiring).
+
+    Float32 distances; ``inf`` marks unreachable nodes.  Edge weights ride
+    the seed's *elementwise* slot, so they are reordered once into exec
+    order and closed over as device constants — the mutable input per sweep
+    is the distance vector alone.
+    """
+
+    @classmethod
+    def from_edges(cls, src: np.ndarray, dst: np.ndarray,
+                   weight: np.ndarray, num_nodes: int,
+                   lane_width: int = 128, backend: str = "jax",
+                   cost: CostModel | None = None, fused: bool = True,
+                   stage_b: str = "auto", interpret: bool | None = None,
+                   plan_cache_dir: str | None = None) -> "SSSP":
+        seed = sssp_seed()
+        cost = cost or CostModel(lane_width=lane_width)
+        plan = _build(seed, {"dst": np.asarray(dst), "src": np.asarray(src)},
+                      num_nodes, num_nodes, cost, plan_cache_dir)
+        run = eng.make_executor(
+            plan, {"weight": np.asarray(weight, np.float32)},
+            **_executor_kwargs(backend, fused, stage_b, interpret))
+        return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                   _state_key="dist")
+
+    def run(self, source: int, max_sweeps: int | None = None) -> np.ndarray:
+        dist = np.full(self.num_nodes, np.inf, np.float32)
+        dist[source] = 0.0
+        state = self._converge(jnp.asarray(dist), max_sweeps)
+        return np.asarray(state)
+
+
+@dataclasses.dataclass
+class ConnectedComponents(_FixpointApp):
+    """Connected components by min-label propagation (int32 labels).
+
+    The edge list is symmetrized at plan-build time (connectivity is
+    undirected); every node starts labeled with its own id and converges to
+    the minimum node id of its component.
+    """
+
+    @classmethod
+    def from_edges(cls, src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                   lane_width: int = 128, backend: str = "jax",
+                   cost: CostModel | None = None, fused: bool = True,
+                   stage_b: str = "auto", interpret: bool | None = None,
+                   plan_cache_dir: str | None = None
+                   ) -> "ConnectedComponents":
+        seed = cc_seed()
+        cost = cost or CostModel(lane_width=lane_width)
+        s = np.concatenate([np.asarray(src), np.asarray(dst)])
+        d = np.concatenate([np.asarray(dst), np.asarray(src)])
+        plan = _build(seed, {"dst": d, "src": s},
+                      num_nodes, num_nodes, cost, plan_cache_dir)
+        run = eng.make_executor(plan, {}, **_executor_kwargs(
+            backend, fused, stage_b, interpret))
+        return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                   _state_key="label")
+
+    def run(self, max_sweeps: int | None = None) -> np.ndarray:
+        """Component labels: ``label[v]`` = min node id in v's component."""
+        state = jnp.arange(self.num_nodes, dtype=jnp.int32)
+        state = self._converge(state, max_sweeps)
+        return np.asarray(state)
+
+
+# --------------------------------------------------------------- oracles
+# Plain-numpy references (tests cross-check against scipy.sparse.csgraph
+# where available; these keep the oracle dependency-free).
+
+def bfs_reference(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                  source: int) -> np.ndarray:
+    """Frontier BFS; int32 levels, -1 where unreachable."""
+    level = np.full(num_nodes, -1, np.int32)
+    level[source] = 0
+    frontier = np.asarray([source])
+    d = 0
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    while frontier.size:
+        on_front = np.isin(src, frontier)
+        nxt = np.unique(dst[on_front])
+        nxt = nxt[level[nxt] == -1]
+        d += 1
+        level[nxt] = d
+        frontier = nxt
+    return level
+
+
+def sssp_reference(src: np.ndarray, dst: np.ndarray, weight: np.ndarray,
+                   num_nodes: int, source: int) -> np.ndarray:
+    """Synchronous Bellman-Ford in float64; inf where unreachable."""
+    dist = np.full(num_nodes, np.inf)
+    dist[source] = 0.0
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    w = np.asarray(weight, np.float64)
+    for _ in range(num_nodes + 1):
+        new = dist.copy()
+        np.minimum.at(new, dst, dist[src] + w)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def cc_reference(src: np.ndarray, dst: np.ndarray, num_nodes: int
+                 ) -> np.ndarray:
+    """Union-find; labels are the min node id per component."""
+    parent = np.arange(num_nodes)
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for a, b in zip(np.asarray(src).tolist(), np.asarray(dst).tolist()):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.asarray([find(v) for v in range(num_nodes)], np.int32)

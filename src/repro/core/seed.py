@@ -42,6 +42,28 @@ REDUCE_OPS = {
 }
 
 
+def reduce_identity_for(reduce: str, dtype) -> np.generic:
+    """Identity element of ``reduce`` *in the given dtype* (DESIGN.md §3a).
+
+    Integer dtypes have no ``±inf``: the max/min identities are the dtype's
+    ``iinfo`` bounds.  Every pad lane, empty segment, and discard bucket in
+    the engine must use this (a float ``inf`` cast to int32 is undefined
+    behaviour and was a confirmed silent-wrong-answer bug for int min/max
+    reduces).
+    """
+    dt = np.dtype(dtype)
+    if reduce == "add":
+        return dt.type(0)
+    if reduce == "mul":
+        return dt.type(1)
+    if reduce not in REDUCE_OPS:
+        raise ValueError(f"unsupported reduce {reduce!r}")
+    if np.issubdtype(dt, np.floating):
+        return dt.type(-np.inf if reduce == "max" else np.inf)
+    info = np.iinfo(dt)
+    return dt.type(info.min if reduce == "max" else info.max)
+
+
 @dataclasses.dataclass(frozen=True)
 class CodeSeed:
     """Declarative description of one irregular loop nest ``for i in range(nnz)``.

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.seed import reduce_identity_for
+
 SEG_PAD = -(2 ** 30)
 
 REDUCE_FNS = {
@@ -36,23 +38,35 @@ def permute_onehot(windows: jnp.ndarray, slot: jnp.ndarray,
     ``one_hot(slot * N + offset) @ concat(windows)`` — an (N, M*N) x (M*N,)
     matmul that maps onto the MXU.  Equivalent to
     ``concat(windows)[slot * N + offset]``.
+
+    Implemented as a masked select-sum rather than a literal
+    ``one_hot @ flat`` matmul: the semiring payloads carry non-finite
+    identities (``±inf`` for float min/max) and int32 words that float32
+    cannot represent, and the matmul form computes ``0 · inf = NaN`` /
+    rounds large ints.  Exactly one mask bit is set per lane, so the sum
+    returns the selected word bit for bit for every dtype, and the
+    mask+sum still vectorizes on the VPU (one-hot generation is shared
+    with the matmul form; only the combine differs).
     """
     m, n = windows.shape
-    flat = windows.reshape(m * n).astype(jnp.float32)
     sel = (slot.astype(jnp.int32) * n + offset.astype(jnp.int32)).reshape(n)
     cols = jax.lax.broadcasted_iota(jnp.int32, (n, m * n), 1)
-    onehot = (cols == sel[:, None]).astype(jnp.float32)
-    return onehot @ flat
+    onehot = cols == sel[:, None]
+    flat = windows.reshape(m * n)
+    return jnp.where(onehot, flat[None, :],
+                     jnp.zeros((), flat.dtype)).sum(axis=1)
 
 
 def segmented_reduce_lanes(term: jnp.ndarray, seg: jnp.ndarray,
                            op_flag: int, reduce: str) -> jnp.ndarray:
     """(1, N) lane vector -> (1, N) with each segment head holding the full
     segment reduction.  ``op_flag`` is static (one kernel specialization per
-    pattern class — the paper's per-flag code generation)."""
-    op, identity, full = REDUCE_FNS[reduce]
+    pattern class — the paper's per-flag code generation).  Shift pads use
+    the dtype-aware identity (DESIGN.md §3a)."""
+    op, _, full = REDUCE_FNS[reduce]
+    identity = reduce_identity_for(reduce, term.dtype)
     if op_flag == FULL_REDUCE:
-        total = full(term.astype(jnp.float32))
+        total = full(term)
         lane = jax.lax.broadcasted_iota(jnp.int32, term.shape, 1)
         return jnp.where(lane == 0, total, term)
     for k in range(op_flag):

@@ -58,13 +58,13 @@ def _stage_a_body(win_ref, flag_ref, *refs, combine: Callable,
     for gi, g in enumerate(gathered):
         tiles = [win_refs[gi * ls + k][...] for k in range(ls)]  # ls x (1, N)
         if stream:
-            vals[g] = tiles[0][0].astype(jnp.float32)
+            vals[g] = tiles[0][0]
         else:
             windows = jnp.concatenate(tiles, axis=0)             # (ls, N)
             vals[g] = common.permute_onehot(windows, slot_ref[...],
                                             off_ref[...])
     for ei, e in enumerate(elementwise):
-        vals[e] = elem_refs[ei][...][0].astype(jnp.float32)
+        vals[e] = elem_refs[ei][...][0]
 
     term = combine(vals).reshape(1, -1)
     red = common.segmented_reduce_lanes(term, seg_ref[...], op, reduce)

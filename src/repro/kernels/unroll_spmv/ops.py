@@ -15,11 +15,23 @@ lanes matrix in exec-block order.  Two launch modes:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
 from repro.core.plan import GATHER_FALLBACK, BlockPlan
 from repro.kernels.unroll_spmv.kernel import class_stage_a
+
+
+def _term_dtype(seed, mutable, elem_exec):
+    """The dtype of the seed's combine expression for these inputs — the
+    kernel's lane/output dtype (int32 for the graph semirings; the old
+    hard-coded float32 silently corrupted large int values)."""
+    specs = {g: jax.ShapeDtypeStruct((1,), jnp.asarray(mutable[g]).dtype)
+             for g in seed.gathered}
+    for e in seed.elementwise:
+        specs[e] = jax.ShapeDtypeStruct((1,), elem_exec[e].dtype)
+    return jax.eval_shape(seed.combine, specs).dtype
 
 
 def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
@@ -44,6 +56,7 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
     def stage_a(mutable):
         views = {g: eng._pad_gathered(plan, jnp.asarray(mutable[g]))
                  for g in seed.gathered}
+        out_dtype = _term_dtype(seed, mutable, elem_exec)
         parts = []
         for c, cm in zip(classes, class_meta):
             s = plan.class_slice(c)
@@ -55,12 +68,10 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
                 vals.update(elem_blocks)
                 term = seed.combine(vals)
                 red = eng.segmented_reduce(term, cm["seg"], c.op_flag,
-                                           seed.reduce,
-                                           seed.reduce_identity)
+                                           seed.reduce)
                 if cm["full"] is not None:
                     native = eng.segmented_reduce(
-                        term, cm["seg"], eng.ft.FULL_REDUCE, seed.reduce,
-                        seed.reduce_identity)
+                        term, cm["seg"], eng.ft.FULL_REDUCE, seed.reduce)
                     red = jnp.where((cm["full"] != 0)[:, None], native, red)
                 parts.append(red)
                 continue
@@ -69,7 +80,8 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
                 cm["seg"], combine=seed.combine, gathered=seed.gathered,
                 elementwise=seed.elementwise, ls=max(c.ls_flag, 1),
                 op=c.op_flag, stream=c.stream, reduce=seed.reduce,
-                full_flags=cm["full"], interpret=interpret))
+                full_flags=cm["full"], out_dtype=out_dtype,
+                interpret=interpret))
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
     return stage_a

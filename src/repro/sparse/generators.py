@@ -123,15 +123,65 @@ def suite(scale: str = "small") -> list[COOMatrix]:
 
 def graph_edges(kind: str, n: int, avg_deg: int = 16, seed: int = 11
                 ) -> tuple[np.ndarray, np.ndarray, int]:
-    """Edge lists for PageRank (paper's amazon/twitter/pokec analogues)."""
+    """Edge lists for the graph applications (paper's amazon/twitter/pokec
+    analogues, plus the degenerate classes that stress the engine's
+    identity handling: empty graphs and isolated/dangling nodes)."""
     if kind == "powerlaw":
         m = power_law(n, avg_deg, seed=seed)
         return np.asarray(m.rows), np.asarray(m.cols), n
     if kind == "uniform":
         m = random_uniform(n, avg_deg, seed=seed)
         return np.asarray(m.rows), np.asarray(m.cols), n
+    if kind == "banded":
+        m = banded(n, band=max(2, avg_deg // 2), seed=seed)
+        return np.asarray(m.rows), np.asarray(m.cols), n
     if kind == "ring":
         src = np.arange(n)
         dst = (src + 1) % n
         return src, dst, n
+    if kind == "empty":
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), n
+    if kind == "isolated":
+        # edges only among the first half of the nodes; the second half is
+        # isolated, and within the connected half some nodes are dangling
+        # (out-degree 0) because edges are random.
+        m = random_uniform(max(n // 2, 1), avg_deg, seed=seed)
+        return np.asarray(m.rows), np.asarray(m.cols), n
     raise ValueError(kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCase:
+    """One graph-application benchmark/test input: weighted directed edges."""
+    name: str
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray   # float32, positive (SSSP-safe)
+    num_nodes: int
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+def graph_case(kind: str, n: int, avg_deg: int = 16, seed: int = 11
+               ) -> GraphCase:
+    src, dst, n = graph_edges(kind, n, avg_deg=avg_deg, seed=seed)
+    rng = np.random.default_rng(seed + 1000)
+    w = rng.uniform(0.1, 1.0, size=src.shape[0]).astype(np.float32)
+    return GraphCase(kind, src, dst, w, n)
+
+
+def graph_suite(scale: str = "small") -> list[GraphCase]:
+    """The graph-application corpus (BFS/SSSP/CC benchmarks + oracles)."""
+    if scale == "small":
+        n = 512
+    else:
+        n = 8192
+    return [graph_case("powerlaw", n, 8),
+            graph_case("uniform", n, 6),
+            graph_case("banded", n, 8),
+            graph_case("ring", n),
+            graph_case("isolated", n, 6),
+            graph_case("empty", 64)]

@@ -1,0 +1,209 @@
+"""Graph-application subsystem tests (paper §7: BFS / SSSP / CC).
+
+Each app runs through the full plan/fused-executor stack and is checked
+against independent oracles (plain-numpy here, scipy.sparse.csgraph where
+available) across the generator graph classes — including the degenerate
+ones (empty graph, isolated/dangling nodes) that stress the identity
+handling of the non-add reduces.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graphs as GR
+from repro.sparse import generators as G
+
+GRAPH_KINDS = ["powerlaw", "uniform", "banded", "ring", "isolated", "empty"]
+
+
+def _case(kind, n=256, avg_deg=6):
+    if kind == "empty":
+        n = 48
+    if kind == "ring":
+        n = 64          # diameter-bound sweeps: keep convergence short
+    return G.graph_case(kind, n, avg_deg)
+
+
+@pytest.mark.parametrize("backend", ["jax", "segsum"])
+@pytest.mark.parametrize("kind", GRAPH_KINDS)
+def test_bfs_matches_reference(kind, backend):
+    c = _case(kind)
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16,
+                            backend=backend)
+    lv = app.run(0)
+    ref = GR.bfs_reference(c.src, c.dst, c.num_nodes, 0)
+    np.testing.assert_array_equal(lv, ref)
+    assert lv.dtype == np.int32
+
+
+@pytest.mark.parametrize("backend", ["jax", "segsum"])
+@pytest.mark.parametrize("kind", GRAPH_KINDS)
+def test_sssp_matches_reference(kind, backend):
+    c = _case(kind)
+    app = GR.SSSP.from_edges(c.src, c.dst, c.weight, c.num_nodes,
+                             lane_width=16, backend=backend)
+    d = app.run(0)
+    ref = GR.sssp_reference(c.src, c.dst, c.weight, c.num_nodes, 0)
+    np.testing.assert_allclose(d, ref, rtol=1e-5, atol=1e-6)
+    # unreachable-set must match exactly
+    np.testing.assert_array_equal(np.isinf(d), np.isinf(ref))
+
+
+@pytest.mark.parametrize("backend", ["jax", "segsum"])
+@pytest.mark.parametrize("kind", GRAPH_KINDS)
+def test_cc_matches_reference(kind, backend):
+    c = _case(kind)
+    app = GR.ConnectedComponents.from_edges(c.src, c.dst, c.num_nodes,
+                                            lane_width=16, backend=backend)
+    np.testing.assert_array_equal(
+        app.run(), GR.cc_reference(c.src, c.dst, c.num_nodes))
+
+
+@pytest.mark.parametrize("kind", ["powerlaw", "isolated"])
+def test_graph_apps_pallas_interpret(kind):
+    """All three apps on the Pallas backend (interpret mode), small graph."""
+    c = G.graph_case(kind, 96, 5)
+    kw = dict(lane_width=16, backend="pallas", interpret=True)
+    bfs = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, **kw)
+    np.testing.assert_array_equal(
+        bfs.run(0), GR.bfs_reference(c.src, c.dst, c.num_nodes, 0))
+    sp = GR.SSSP.from_edges(c.src, c.dst, c.weight, c.num_nodes, **kw)
+    np.testing.assert_allclose(
+        sp.run(0), GR.sssp_reference(c.src, c.dst, c.weight, c.num_nodes, 0),
+        rtol=1e-5, atol=1e-6)
+    cc = GR.ConnectedComponents.from_edges(c.src, c.dst, c.num_nodes, **kw)
+    np.testing.assert_array_equal(
+        cc.run(), GR.cc_reference(c.src, c.dst, c.num_nodes))
+
+
+def test_graph_apps_fused_matches_per_class():
+    """Fused vs per-class parity holds for min-reduce graph sweeps too."""
+    c = G.graph_case("powerlaw", 384, 6)
+    for fused in (False, True):
+        app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16,
+                                fused=fused)
+        if fused:
+            np.testing.assert_array_equal(app.run(0), base)
+        else:
+            base = app.run(0)
+
+
+def test_multi_source_bfs_vmap():
+    """Batched multi-source BFS: one vmapped sweep == per-source runs."""
+    c = G.graph_case("powerlaw", 256, 6)
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    sources = [0, 3, 17, 101]
+    multi = app.run_multi(sources)
+    assert multi.shape == (len(sources), c.num_nodes)
+    for i, s in enumerate(sources):
+        np.testing.assert_array_equal(
+            multi[i], GR.bfs_reference(c.src, c.dst, c.num_nodes, s))
+
+
+def test_convergence_driver_reuses_one_plan():
+    """The amortization claim: ONE build_plan per graph across all sweeps
+    (and across single- and multi-source runs of the same app)."""
+    c = G.graph_case("uniform", 200, 5)
+    before = GR.plan_build_count()
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    assert GR.plan_build_count() == before + 1
+    app.run(0)
+    app.run(1)
+    app.run_multi([0, 2, 4])
+    assert GR.plan_build_count() == before + 1   # no rebuilds in any sweep
+    assert app.sweeps_run >= 1
+
+
+def test_convergence_early_exit():
+    """The driver stops at the fixpoint, not at the max-sweep bound."""
+    c = G.graph_case("powerlaw", 256, 8)
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    app.run(0)
+    assert app.converged and app.sweeps_run < c.num_nodes // 4
+    # an empty graph converges after exactly one (no-op) sweep
+    e = G.graph_case("empty", 32)
+    app = GR.BFS.from_edges(e.src, e.dst, e.num_nodes, lane_width=16)
+    lv = app.run(0)
+    assert app.converged and app.sweeps_run == 1
+    np.testing.assert_array_equal(lv, [0] + [-1] * 31)
+    # a truncated run reports converged=False
+    r = G.graph_case("ring", 64)
+    app = GR.BFS.from_edges(r.src, r.dst, r.num_nodes, lane_width=16)
+    app.run(0, max_sweeps=3)
+    assert not app.converged and app.sweeps_run == 3
+
+
+def test_bfs_levels_are_int32_end_to_end():
+    """Int32 levels survive the engine without a float roundtrip: a level
+    placed above float32's exact-integer range keeps its exact value."""
+    src = np.asarray([0]); dst = np.asarray([1])
+    app = GR.BFS.from_edges(src, dst, 2, lane_width=8)
+    big = np.int32(2 ** 24 + 1)          # not representable in float32
+    out = app.sweep(jnp.asarray(np.asarray([big, big + 7], np.int32)))
+    assert np.asarray(out)[1] == big + 1
+
+
+# ------------------------------------------------ scipy.csgraph cross-check
+# importorskip stays INSIDE each test: a module-level skip would silently
+# drop the numpy-oracle tests above on a scipy-less environment.
+
+def _scipy():
+    csgraph = pytest.importorskip("scipy.sparse.csgraph")
+    sparse = pytest.importorskip("scipy.sparse")
+    return csgraph, sparse
+
+
+def _csr(sparse, c, weights=None):
+    data = np.ones(c.num_edges) if weights is None else weights
+    return sparse.csr_matrix(
+        (data, (c.src, c.dst)), shape=(c.num_nodes, c.num_nodes))
+
+
+@pytest.mark.parametrize("kind", ["powerlaw", "uniform", "banded", "ring"])
+def test_bfs_matches_scipy(kind):
+    scipy_csgraph, sparse = _scipy()
+    c = _case(kind)
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    hops = scipy_csgraph.shortest_path(_csr(sparse, c), method="D",
+                                       directed=True,
+                                       unweighted=True, indices=0)
+    want = np.where(np.isinf(hops), -1, hops).astype(np.int32)
+    np.testing.assert_array_equal(app.run(0), want)
+
+
+@pytest.mark.parametrize("kind", ["powerlaw", "uniform", "banded", "ring"])
+def test_sssp_matches_scipy(kind):
+    scipy_csgraph, sparse = _scipy()
+    c = _case(kind)
+    app = GR.SSSP.from_edges(c.src, c.dst, c.weight, c.num_nodes,
+                             lane_width=16)
+    # duplicate edges collapse to a single entry in CSR: keep the MIN
+    # weight per (src, dst) pair, matching shortest-path semantics
+    order = np.lexsort((c.weight, c.dst, c.src))
+    s, d, w = c.src[order], c.dst[order], c.weight[order]
+    first = np.ones(s.size, bool)
+    first[1:] = (s[1:] != s[:-1]) | (d[1:] != d[:-1])
+    m = sparse.csr_matrix((w[first].astype(np.float64),
+                           (s[first], d[first])),
+                          shape=(c.num_nodes, c.num_nodes))
+    ref = scipy_csgraph.shortest_path(m, method="BF", directed=True,
+                                      indices=0)
+    # the engine relaxes ALL parallel edges, scipy only the min-weight one
+    # — identical shortest paths; float32 vs float64 gives the tolerance
+    np.testing.assert_allclose(app.run(0), ref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["powerlaw", "uniform", "isolated", "empty"])
+def test_cc_matches_scipy(kind):
+    scipy_csgraph, sparse = _scipy()
+    c = _case(kind)
+    app = GR.ConnectedComponents.from_edges(c.src, c.dst, c.num_nodes,
+                                            lane_width=16)
+    labels = app.run()
+    ncomp, comp = scipy_csgraph.connected_components(_csr(sparse, c),
+                                                     directed=False)
+    # same partition, and our label is the min node id of the component
+    assert len(np.unique(labels)) == ncomp
+    for cid in range(ncomp):
+        members = np.nonzero(comp == cid)[0]
+        assert (labels[members] == members.min()).all()

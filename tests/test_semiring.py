@@ -1,0 +1,189 @@
+"""Semiring correctness sweep: every reduce op on every backend/dtype.
+
+The seed's reduce machinery (`add`/`mul`/`max`/`min`) was historically only
+exercised by add-reduce apps; these tests pin the full support matrix
+(DESIGN.md §3a) against the `reference_execute` oracle:
+
+* reduce {add, mul, max, min} x dtype {float32, int32} x stage_b
+  {gather, dense} x fused {on, off} x backend {jax, segsum,
+  pallas-interpret} — exact equality for int32 and for the order-invariant
+  float min/max, allclose for float add/mul (reduction order differs from
+  the oracle's by design),
+* the confirmed int32 min-reduce `stage_b="dense"` silent-wrong-answer
+  repro passes exactly (no allclose slack),
+* no RuntimeWarning anywhere: integer pads must use the dtype-aware
+  identity, never a float ``±inf`` cast.
+"""
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng
+from repro.core.plan import CostModel, build_plan
+from repro.core.seed import (CodeSeed, reduce_identity_for,
+                             reference_execute)
+
+
+def _problem(dtype, seed_int=0, nnz=180, out_len=24, data_len=60):
+    rng = np.random.default_rng(seed_int)
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        vals = rng.integers(-9, 9, nnz).astype(dtype)
+        x = rng.integers(-9, 9, data_len).astype(dtype)
+        init = rng.integers(-9, 9, out_len).astype(dtype)
+    else:
+        vals = rng.standard_normal(nnz).astype(dtype)
+        x = rng.standard_normal(data_len).astype(dtype)
+        init = rng.standard_normal(out_len).astype(dtype)
+    return rows, cols, vals, x, init
+
+
+def _seed_for(reduce):
+    return CodeSeed(name="t", output="y", out_index="row",
+                    gather_index="col", gathered=("x",),
+                    elementwise=("value",),
+                    combine=lambda v: v["value"] * v["x"], reduce=reduce)
+
+
+def _assert_matches(y, yref, reduce, dtype):
+    exact = (np.issubdtype(np.dtype(dtype), np.integer)
+             or reduce in ("max", "min"))
+    if exact:
+        np.testing.assert_array_equal(y, yref)
+    else:
+        np.testing.assert_allclose(y, yref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jax", "segsum", "pallas"])
+@pytest.mark.parametrize("reduce", ["add", "mul", "max", "min"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_reduce_backend_dtype_matrix(backend, reduce, dtype):
+    """Support matrix: all four reduces x both dtypes on all three
+    backends, both write-backs, fused and per-class — vs the scatter
+    oracle, with warnings escalated (the int-pad cast bug warned)."""
+    rows, cols, vals, x, init = _problem(dtype)
+    seed = _seed_for(reduce)
+    plan = build_plan(seed, {"row": rows, "col": cols},
+                      init.shape[0], x.shape[0], CostModel(lane_width=8))
+    yref = np.asarray(reference_execute(
+        seed, {"row": rows, "col": cols},
+        {"x": jnp.asarray(x), "value": jnp.asarray(vals)},
+        jnp.asarray(init)))
+    stage_bs = ("gather",) if backend == "segsum" else ("gather", "dense")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        for fused in (False, True):
+            for stage_b in stage_bs:
+                run = eng.make_executor(plan, {"value": vals},
+                                        backend=backend, fused=fused,
+                                        stage_b=stage_b, interpret=True)
+                y = np.asarray(run({"x": jnp.asarray(x)},
+                                   jnp.asarray(init)))
+                _assert_matches(y, yref, reduce, dtype)
+
+
+def test_int32_min_dense_stage_b_exact():
+    """The first-satellite repro: int32 min-reduce SpMV with
+    ``stage_b="dense"`` must match the oracle EXACTLY (the float ``-inf``
+    discard-bucket identity silently zeroed / corrupted every row)."""
+    rng = np.random.default_rng(0)
+    nnz, out_len, data_len = 300, 40, 100
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.integers(-50, 50, nnz).astype(np.int32)
+    x = rng.integers(-50, 50, data_len).astype(np.int32)
+    seed = _seed_for("min")
+    plan = build_plan(seed, {"row": rows, "col": cols}, out_len, data_len,
+                      CostModel(lane_width=16))
+    init = jnp.full(out_len, reduce_identity_for("min", np.int32), jnp.int32)
+    yref = np.asarray(reference_execute(
+        seed, {"row": rows, "col": cols},
+        {"x": jnp.asarray(x), "value": jnp.asarray(vals)}, init))
+    for fused in (False, True):
+        run = eng.make_executor(plan, {"value": vals}, stage_b="dense",
+                                fused=fused)
+        np.testing.assert_array_equal(
+            np.asarray(run({"x": jnp.asarray(x)}, init)), yref)
+
+
+def test_reduce_identity_for_dtypes():
+    ii = np.iinfo(np.int32)
+    assert reduce_identity_for("min", np.int32) == ii.max
+    assert reduce_identity_for("max", np.int32) == ii.min
+    assert reduce_identity_for("add", np.int32) == 0
+    assert reduce_identity_for("mul", np.int32) == 1
+    assert reduce_identity_for("min", np.float32) == np.inf
+    assert reduce_identity_for("max", np.float32) == -np.inf
+    for red in ("add", "mul", "max", "min"):
+        for dt in (np.float32, np.float64, np.int32, np.int64, np.uint8):
+            ident = reduce_identity_for(red, dt)
+            assert ident.dtype == np.dtype(dt)
+    with pytest.raises(ValueError):
+        reduce_identity_for("xor", np.int32)
+
+
+def test_reorder_elementwise_int_identity_no_warning():
+    """Integer elementwise arrays must pad with the dtype identity, not a
+    float ``±inf`` (which raised RuntimeWarning and left undefined lanes)."""
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 10, 50)
+    cols = rng.integers(0, 20, 50)
+    vals = rng.integers(-5, 5, 50).astype(np.int32)
+    seed = _seed_for("min")
+    plan = build_plan(seed, {"row": rows, "col": cols}, 10, 20,
+                      CostModel(lane_width=8))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        out = eng.reorder_elementwise(plan, vals, reduce="min")
+    assert out.dtype == jnp.int32
+    pad = np.asarray(out).reshape(-1)[
+        np.asarray(plan.flat_perm) >= plan.nnz]
+    assert (pad == np.iinfo(np.int32).max).all()
+
+
+def test_segsum_all_reduces_execute():
+    """The segsum backend must build AND run every reduce (it used to
+    raise NotImplementedError from inside the jitted fn at first call)."""
+    rows, cols, vals, x, init = _problem(np.float32, seed_int=3)
+    for reduce in ("mul", "max", "min"):
+        seed = _seed_for(reduce)
+        plan = build_plan(seed, {"row": rows, "col": cols},
+                          init.shape[0], x.shape[0], CostModel(lane_width=8))
+        run = eng.make_executor(plan, {"value": vals}, backend="segsum")
+        y = np.asarray(run({"x": jnp.asarray(x)}, jnp.asarray(init)))
+        yref = np.asarray(reference_execute(
+            seed, {"row": rows, "col": cols},
+            {"x": jnp.asarray(x), "value": jnp.asarray(vals)},
+            jnp.asarray(init)))
+        _assert_matches(y, yref, reduce, np.float32)
+
+
+def test_float_minmax_with_inf_payload():
+    """Non-finite payloads (the min/max semiring identities) flow through
+    every backend without generating NaN — the one-hot *matmul* permute
+    computed ``0 x inf = NaN`` (kernels/common.py select-sum fix)."""
+    rng = np.random.default_rng(5)
+    nnz, out_len, data_len = 120, 16, 40
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = np.ones(nnz, np.float32)
+    x = rng.standard_normal(data_len).astype(np.float32)
+    x[::5] = np.inf                     # unreached-style sentinel values
+    seed = CodeSeed(name="t", output="y", out_index="row",
+                    gather_index="col", gathered=("x",), elementwise=("value",),
+                    combine=lambda v: v["x"] + v["value"], reduce="min")
+    plan = build_plan(seed, {"row": rows, "col": cols}, out_len, data_len,
+                      CostModel(lane_width=8))
+    init = jnp.full(out_len, jnp.inf, jnp.float32)
+    yref = np.asarray(reference_execute(
+        seed, {"row": rows, "col": cols},
+        {"x": jnp.asarray(x), "value": jnp.asarray(vals)}, init))
+    for backend in ("jax", "segsum", "pallas"):
+        run = eng.make_executor(plan, {"value": vals}, backend=backend,
+                                interpret=True)
+        y = np.asarray(run({"x": jnp.asarray(x)}, init))
+        assert not np.isnan(y).any(), backend
+        np.testing.assert_array_equal(y, yref, err_msg=backend)
