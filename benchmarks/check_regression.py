@@ -1,0 +1,90 @@
+"""Bench-regression guard: compare two BENCH_*.json files and fail when a
+checked-in speedup drops.
+
+``python -m benchmarks.check_regression OLD.json NEW.json [--min-ratio 0.9]``
+
+Every row carrying ``speedup_vs_per_class`` (the spmv_exec trajectory —
+the quantity the fused executor and the autotuner are accountable for) is
+matched across the two files by its identity columns; the guard fails if
+any matched row's new speedup is below ``min-ratio`` x its previous
+value.  Ratios of speedups (not raw microseconds) are compared on
+purpose: both modes of one row pair were timed interleaved in one
+process, so the ratio is robust to machine-to-machine absolute-speed
+differences, which is what lets CI compare against the checked-in file.
+
+Rows present on only one side (new datasets, new modes) are reported but
+never fail the guard — growth must not be punished.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRIC = "speedup_vs_per_class"
+_KEYS = ("bench", "dataset", "mode", "backend", "app", "lane_width")
+
+
+def _index(payload: dict) -> dict:
+    out = {}
+    for row in payload.get("timings", []):
+        if METRIC not in row:
+            continue
+        key = tuple((k, row.get(k)) for k in _KEYS if k in row)
+        out[key] = float(row[METRIC])
+    return out
+
+
+def _fmt(key: tuple) -> str:
+    return "/".join(str(v) for _, v in key)
+
+
+def check(old_path: str, new_path: str, min_ratio: float = 0.9) -> int:
+    with open(old_path) as f:
+        old = _index(json.load(f))
+    with open(new_path) as f:
+        new = _index(json.load(f))
+    if not old:
+        print(f"regression_guard: no {METRIC} rows in {old_path}; "
+              "nothing to compare")
+        return 0
+    failures = []
+    for key in sorted(old):
+        if key not in new:
+            print(f"only_in_old,{_fmt(key)},{old[key]}")
+            continue
+        ratio = new[key] / old[key] if old[key] else 1.0
+        status = "OK" if ratio >= min_ratio else "REGRESSION"
+        print(f"{status},{_fmt(key)},old={old[key]:.3f},"
+              f"new={new[key]:.3f},ratio={ratio:.3f}")
+        if ratio < min_ratio:
+            failures.append((key, old[key], new[key], ratio))
+    for key in sorted(set(new) - set(old)):
+        print(f"only_in_new,{_fmt(key)},{new[key]}")
+    if failures:
+        print(f"\nregression_guard: {len(failures)} row(s) fell below "
+              f"{min_ratio:.2f}x their previous {METRIC}:",
+              file=sys.stderr)
+        for key, o, n, r in failures:
+            print(f"  {_fmt(key)}: {o:.3f} -> {n:.3f} ({r:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print(f"regression_guard: {len(old)} row(s) checked, none below "
+          f"{min_ratio:.2f}x")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline JSON (e.g. checked-in "
+                                "BENCH_spmv.json)")
+    ap.add_argument("new", help="freshly measured JSON")
+    ap.add_argument("--min-ratio", type=float, default=0.9,
+                    help="fail when new/old speedup falls below this "
+                         "(default 0.9)")
+    args = ap.parse_args()
+    sys.exit(check(args.old, args.new, args.min_ratio))
+
+
+if __name__ == "__main__":
+    main()

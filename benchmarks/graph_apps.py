@@ -20,18 +20,18 @@ from repro.sparse import generators as G
 APPS = ("bfs", "sssp", "cc")
 
 
-def _build(app: str, case, backend: str, lane_width: int):
+def _build(app: str, case, backend: str, lane_width: int,
+           tune_cache_dir: str | None = None):
+    kw = dict(lane_width=lane_width, backend=backend)
+    if backend == "auto":
+        kw["tune_cache_dir"] = tune_cache_dir
     if app == "bfs":
-        return GR.BFS.from_edges(case.src, case.dst, case.num_nodes,
-                                 lane_width=lane_width, backend=backend)
+        return GR.BFS.from_edges(case.src, case.dst, case.num_nodes, **kw)
     if app == "sssp":
         return GR.SSSP.from_edges(case.src, case.dst, case.weight,
-                                  case.num_nodes, lane_width=lane_width,
-                                  backend=backend)
+                                  case.num_nodes, **kw)
     return GR.ConnectedComponents.from_edges(case.src, case.dst,
-                                             case.num_nodes,
-                                             lane_width=lane_width,
-                                             backend=backend)
+                                             case.num_nodes, **kw)
 
 
 def _initial_state(app: str, inst) -> jnp.ndarray:
@@ -55,9 +55,16 @@ def _time_sweep(inst, state, reps: int = 30) -> float:
 def bench_graph_apps(scale: str = "small",
                      backends: tuple = ("jax", "segsum"),
                      pallas: bool = False,
-                     lane_width: int = 128) -> list[dict]:
-    """One row per (app, backend, graph class) — the BENCH_graph payload."""
+                     lane_width: int = 128,
+                     tuned: bool = False,
+                     tune_cache_dir: str | None = None) -> list[dict]:
+    """One row per (app, backend, graph class) — the BENCH_graph payload.
+    ``tuned=True`` adds one ``backend="auto"`` row per (app, graph) with
+    the chosen configuration and the cold/warm tuning measurement counts
+    (warm must be 0)."""
     backends = tuple(backends) + (("pallas",) if pallas else ())
+    if tuned:
+        backends = backends + ("auto",)
     rows = []
     for case in G.graph_suite(scale):
         # full convergence on the ring is diameter-bound (O(n) sweeps);
@@ -65,12 +72,33 @@ def bench_graph_apps(scale: str = "small",
         max_sweeps = 64 if case.name == "ring" else None
         for backend in backends:
             for app in APPS:
+                tune_info = {}
                 before = GR.plan_build_count()
                 t0 = time.perf_counter()
-                inst = _build(app, case, backend, lane_width)
+                if backend == "auto":
+                    from repro import tune as tn
+                    m0 = tn.measurement_count()
+                    inst = _build(app, case, backend, lane_width,
+                                  tune_cache_dir)
+                    cold_meas = tn.measurement_count() - m0
+                    m0 = tn.measurement_count()
+                    inst = _build(app, case, backend, lane_width,
+                                  tune_cache_dir)
+                    tune_info = {
+                        "chosen": inst.tuning.best.to_dict(),
+                        "tune_measurements": cold_meas,
+                        "tune_measurements_warm":
+                            tn.measurement_count() - m0,
+                    }
+                else:
+                    inst = _build(app, case, backend, lane_width)
                 build_s = time.perf_counter() - t0
                 builds = GR.plan_build_count() - before
-                assert builds == 1, (app, case.name, builds)
+                if backend != "auto":
+                    # the convergence driver must never rebuild a plan;
+                    # the auto path legitimately builds one per plan key
+                    # while tuning
+                    assert builds == 1, (app, case.name, builds)
                 state = _initial_state(app, inst)
                 us = _time_sweep(inst, state,
                                  reps=5 if backend == "pallas" else 30)
@@ -90,5 +118,6 @@ def bench_graph_apps(scale: str = "small",
                     "converged": inst.converged,
                     "plan_build_s": round(build_s, 4),
                     "plan_builds": builds,
+                    **tune_info,
                 })
     return rows

@@ -6,11 +6,19 @@ exist.  ``--json PATH`` additionally writes the machine-readable perf
 trajectory (backend x dataset x fused/per-class ``us_per_call`` plus
 plan-build seconds) — the file checked in as ``BENCH_spmv.json``.
 
-``python -m benchmarks.run [--scale full] [--pallas] [--json out.json]``
+``python -m benchmarks.run [--scale full] [--pallas] [--tuned]
+[--tune-cache DIR] [--json out.json]``
 
 ``--graphs`` switches to the graph-application mode (BFS / SSSP / CC per
 backend per graph class, the paper's §7 graph side); its ``--json`` output
 is the file checked in as ``BENCH_graph.json``.
+
+``--tuned`` adds ``mode="auto"`` / ``backend="auto"`` rows: per-dataset
+variant selection through :mod:`repro.tune`, recording the chosen config
+and the cold/warm tuning measurement counts (a warm rerun over the same
+``--tune-cache`` directory must record 0).  The regression guard
+(``python -m benchmarks.check_regression OLD NEW``) compares the
+``speedup_vs_per_class`` columns of two such JSON files.
 """
 from __future__ import annotations
 
@@ -43,17 +51,30 @@ def _write_json(path: str, schema: str, scale: str, rows: list) -> None:
     print(f"json_written,0,{path}", file=sys.stderr)
 
 
+def _chosen_str(row: dict) -> str:
+    c = row.get("chosen")
+    if not c:
+        return ""
+    mode = "fused" if c["fused"] else "per_class"
+    return (f";chosen={c['backend']}/{mode}/{c['stage_b']}"
+            f"/n{c['lane_width']};tune_meas={row['tune_measurements']}"
+            f";tune_meas_warm={row['tune_measurements_warm']}")
+
+
 def run_graph_mode(args) -> None:
     """Graph-application benchmark mode: emits BENCH_graph.json rows."""
     from benchmarks.graph_apps import bench_graph_apps
 
     print("name,us_per_call,derived")
-    rows = bench_graph_apps(scale=args.scale, pallas=args.pallas)
+    rows = bench_graph_apps(scale=args.scale, pallas=args.pallas,
+                            tuned=args.tuned,
+                            tune_cache_dir=args.tune_cache)
     for r in rows:
         print(f"graph_{r['dataset']}_{r['app']}_{r['backend']},"
               f"{r['us_per_sweep']:.1f},"
               f"sweeps={r['sweeps_run']};converged={r['converged']};"
-              f"build={r['plan_build_s']}s;plan_builds={r['plan_builds']}")
+              f"build={r['plan_build_s']}s;plan_builds={r['plan_builds']}"
+              f"{_chosen_str(r)}")
     if args.json:
         _write_json(args.json, "bench_graph.v1", args.scale, rows)
 
@@ -66,6 +87,13 @@ def main() -> None:
     ap.add_argument("--graphs", action="store_true",
                     help="graph-application mode (BFS/SSSP/CC; "
                          "BENCH_graph.json)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="add backend='auto' rows: per-dataset variant "
+                         "selection via repro.tune (chosen config + "
+                         "cold/warm measurement counts recorded)")
+    ap.add_argument("--tune-cache", default=".tune_cache", metavar="DIR",
+                    help="persistent tuning-cache directory for --tuned "
+                         "(default: .tune_cache)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable timings (BENCH_*.json)")
     args = ap.parse_args()
@@ -113,12 +141,13 @@ def main() -> None:
             print(f"table8_{name}_iu_pallas_interpret,{t_pl:.1f},"
                   f"interpret-mode (not wall-clock-comparable)")
 
-    # ---- fused vs per-class executor + plan-build trajectory
-    exec_rows = T.bench_spmv_exec(scale=args.scale)
+    # ---- fused vs per-class vs tuned-auto executor + plan-build trajectory
+    exec_rows = T.bench_spmv_exec(scale=args.scale, tuned=args.tuned,
+                                  tune_cache_dir=args.tune_cache)
     for r in exec_rows:
         print(f"spmv_exec_{r['dataset']}_{r['mode']},{r['us_per_call']:.1f},"
               f"{r['speedup_vs_per_class']:.2f}x;classes={r['num_classes']};"
-              f"launches={r['num_fused_launches']}")
+              f"launches={r['num_fused_launches']}{_chosen_str(r)}")
     build_rows = T.bench_plan_build()
     for r in build_rows:
         warm = r["cache_warm_s"]

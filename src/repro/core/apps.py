@@ -38,6 +38,7 @@ class SpMV:
     shape: tuple[int, int]
     _run: object
     dtype: np.dtype
+    tuning: object | None = None   # TuningResult when built via backend="auto"
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -45,13 +46,35 @@ class SpMV:
                  backend: str = "jax",
                  cost: CostModel | None = None,
                  fused: bool = True,
-                 plan_cache_dir: str | None = None) -> "SpMV":
+                 stage_b: str = "auto",
+                 plan_cache_dir: str | None = None,
+                 tune: bool = False,
+                 tune_cache_dir: str | None = None) -> "SpMV":
+        """``backend="auto"`` (or ``tune=True``) selects the execution
+        variant per matrix via :mod:`repro.tune` — measured on this
+        device, cached in ``tune_cache_dir`` so warm processes skip the
+        measurements; the decision is recorded in ``.tuning``."""
         seed = spmv_seed()
+        access = {"row": rows, "col": cols}
+        vals = np.asarray(vals)
+        if backend == "auto" or tune:
+            from repro.tune import autotune
+            dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
+                else np.float32
+            x_ex = jnp.asarray(np.random.default_rng(0).standard_normal(
+                shape[1]).astype(dt))
+            plan, run, result = autotune(
+                seed, access, shape[0], shape[1], {"value": vals},
+                {"x": x_ex}, jnp.zeros(shape[0], dt),
+                lane_widths=(lane_width,),
+                tune_cache_dir=tune_cache_dir,
+                plan_cache_dir=plan_cache_dir)
+            return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype,
+                       tuning=result)
         cost = cost or CostModel(lane_width=lane_width)
-        plan = _plan(seed, {"row": rows, "col": cols},
-                     shape[0], shape[1], cost, plan_cache_dir)
+        plan = _plan(seed, access, shape[0], shape[1], cost, plan_cache_dir)
         run = eng.make_executor(plan, {"value": vals}, backend=backend,
-                                fused=fused)
+                                fused=fused, stage_b=stage_b)
         return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype)
 
     @classmethod
@@ -75,6 +98,7 @@ class PageRank:
     dangling: jnp.ndarray
     damping: float
     _run: object
+    tuning: object | None = None   # TuningResult when built via backend="auto"
 
     @classmethod
     def from_edges(cls, src: np.ndarray, dst: np.ndarray, num_nodes: int,
@@ -82,18 +106,35 @@ class PageRank:
                    backend: str = "jax",
                    cost: CostModel | None = None,
                    fused: bool = True,
-                   plan_cache_dir: str | None = None) -> "PageRank":
+                   plan_cache_dir: str | None = None,
+                   tune: bool = False,
+                   tune_cache_dir: str | None = None) -> "PageRank":
         seed = pagerank_seed()
-        cost = cost or CostModel(lane_width=lane_width)
+        access = {"n2": dst, "n1": src}
         deg = np.bincount(src, minlength=num_nodes).astype(np.float64)
         inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
-        plan = _plan(seed, {"n2": dst, "n1": src},
-                     num_nodes, num_nodes, cost, plan_cache_dir)
-        run = eng.make_executor(plan, {}, backend=backend, fused=fused)
+        inv_j = jnp.asarray(inv, jnp.float32)
+        tuning = None
+        if backend == "auto" or tune:
+            from repro.tune import autotune
+            rank_ex = jnp.full((num_nodes,), 1.0 / max(num_nodes, 1),
+                               jnp.float32)
+            plan, run, tuning = autotune(
+                seed, access, num_nodes, num_nodes, {},
+                {"rank": rank_ex, "inv_nneighbor": inv_j},
+                jnp.zeros(num_nodes, jnp.float32),
+                lane_widths=(lane_width,),
+                tune_cache_dir=tune_cache_dir,
+                plan_cache_dir=plan_cache_dir)
+        else:
+            cost = cost or CostModel(lane_width=lane_width)
+            plan = _plan(seed, access, num_nodes, num_nodes, cost,
+                         plan_cache_dir)
+            run = eng.make_executor(plan, {}, backend=backend, fused=fused)
         return cls(plan=plan, num_nodes=num_nodes,
-                   inv_deg=jnp.asarray(inv, jnp.float32),
+                   inv_deg=inv_j,
                    dangling=jnp.asarray(deg == 0),
-                   damping=damping, _run=run)
+                   damping=damping, _run=run, tuning=tuning)
 
     def sweep(self, rank: jnp.ndarray) -> jnp.ndarray:
         """One contribution pass: sum[n2] += rank[n1] * inv_deg[n1]."""

@@ -350,15 +350,30 @@ def _stage_b_dense(plan: BlockPlan, meta, lanes: jnp.ndarray,
     return jnp.minimum(out_init, acc[:n_out])
 
 
+def reorder_static(plan: BlockPlan, static_data: Mapping[str, np.ndarray]
+                   ) -> dict:
+    """Data Transfer for the seed's elementwise arrays: reorder each into
+    exec order once.  The result can be shared across every executor built
+    on the same plan (``make_executor(..., elem_exec=...)``) — the tuner
+    measures several candidate configurations per plan and must not pay
+    the physical reorder per candidate."""
+    seed = plan.seed
+    return {e: reorder_elementwise(plan, static_data[e], reduce=seed.reduce)
+            for e in seed.elementwise}
+
+
 def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                   backend: str = "jax", interpret: bool | None = None,
                   fused: bool = True, stage_b: str = "auto",
-                  fuse_classes: bool | None = None):
+                  fuse_classes: bool | None = None,
+                  elem_exec: Mapping[str, jnp.ndarray] | None = None):
     """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
 
     ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
     arrays in original order; they are reordered once here (Data Transfer)
-    and closed over as device constants.
+    and closed over as device constants.  ``elem_exec`` optionally supplies
+    the already-reordered arrays (:func:`reorder_static`) so multiple
+    executors on one plan share the reorder work.
 
     ``fused`` (default) collapses the per-class launch list into at most
     two launches (DESIGN.md §3); ``fused=False`` keeps the paper's
@@ -370,9 +385,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     if fuse_classes is not None:      # legacy alias of the pre-fused API
         fused = fuse_classes
     seed = plan.seed
-    elem_exec = {e: reorder_elementwise(plan, static_data[e],
-                                        reduce=seed.reduce)
-                 for e in seed.elementwise}
+    if elem_exec is None:
+        elem_exec = reorder_static(plan, static_data)
     meta = {
         "window_ids": jnp.asarray(plan.window_ids),
         "lane_slot": jnp.asarray(plan.lane_slot),

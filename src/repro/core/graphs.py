@@ -64,6 +64,25 @@ def _build(seed: CodeSeed, access, out_len, data_len, cost,
                                     cost=cost, cache_dir=plan_cache_dir)
 
 
+def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
+                    state_key: str, state_example, plan_cache_dir,
+                    tune_cache_dir, lane_width: int = 128):
+    """Input-adaptive variant selection for a graph app: the tuner times
+    one relaxation sweep per candidate on a representative state vector
+    and returns the winning executor.  The convergence driver then reuses
+    that one executor for every sweep — the amortization story is
+    unchanged, only the variant choice became per-input."""
+    from repro.tune import autotune
+    global _plan_builds
+    plan, run, result = autotune(
+        seed, access, num_nodes, num_nodes, static_data,
+        {state_key: state_example}, state_example,
+        lane_widths=(lane_width,),
+        plan_cache_dir=plan_cache_dir, tune_cache_dir=tune_cache_dir)
+    _plan_builds += result.plans_built
+    return plan, run, result
+
+
 def bfs_seed() -> CodeSeed:
     """Level relaxation: ``level[dst] = min(level[dst], level[src] + 1)``."""
     return CodeSeed(name="bfs_relax", output="level", out_index="dst",
@@ -102,6 +121,7 @@ class _FixpointApp:
     _state_key: str
     sweeps_run: int = 0
     converged: bool = False
+    tuning: object | None = None   # TuningResult when built via backend="auto"
 
     def sweep(self, state: jnp.ndarray) -> jnp.ndarray:
         """One relaxation pass folded into the previous state."""
@@ -150,11 +170,22 @@ class BFS(_FixpointApp):
                    lane_width: int = 128, backend: str = "jax",
                    cost: CostModel | None = None, fused: bool = True,
                    stage_b: str = "auto", interpret: bool | None = None,
-                   plan_cache_dir: str | None = None) -> "BFS":
+                   plan_cache_dir: str | None = None,
+                   tune: bool = False,
+                   tune_cache_dir: str | None = None) -> "BFS":
         seed = bfs_seed()
+        access = {"dst": np.asarray(dst), "src": np.asarray(src)}
+        if backend == "auto" or tune:
+            lv = np.full(num_nodes, UNREACHED, np.int32)
+            lv[0] = 0
+            plan, run, tuning = _autotune_build(
+                seed, access, num_nodes, {}, "level", jnp.asarray(lv),
+                plan_cache_dir, tune_cache_dir, lane_width)
+            return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                       _state_key="level", tuning=tuning)
         cost = cost or CostModel(lane_width=lane_width)
-        plan = _build(seed, {"dst": np.asarray(dst), "src": np.asarray(src)},
-                      num_nodes, num_nodes, cost, plan_cache_dir)
+        plan = _build(seed, access, num_nodes, num_nodes, cost,
+                      plan_cache_dir)
         run = eng.make_executor(plan, {}, **_executor_kwargs(
             backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,
@@ -200,13 +231,25 @@ class SSSP(_FixpointApp):
                    lane_width: int = 128, backend: str = "jax",
                    cost: CostModel | None = None, fused: bool = True,
                    stage_b: str = "auto", interpret: bool | None = None,
-                   plan_cache_dir: str | None = None) -> "SSSP":
+                   plan_cache_dir: str | None = None,
+                   tune: bool = False,
+                   tune_cache_dir: str | None = None) -> "SSSP":
         seed = sssp_seed()
+        access = {"dst": np.asarray(dst), "src": np.asarray(src)}
+        static = {"weight": np.asarray(weight, np.float32)}
+        if backend == "auto" or tune:
+            d0 = np.full(num_nodes, np.inf, np.float32)
+            d0[0] = 0.0
+            plan, run, tuning = _autotune_build(
+                seed, access, num_nodes, static, "dist", jnp.asarray(d0),
+                plan_cache_dir, tune_cache_dir, lane_width)
+            return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                       _state_key="dist", tuning=tuning)
         cost = cost or CostModel(lane_width=lane_width)
-        plan = _build(seed, {"dst": np.asarray(dst), "src": np.asarray(src)},
-                      num_nodes, num_nodes, cost, plan_cache_dir)
+        plan = _build(seed, access, num_nodes, num_nodes, cost,
+                      plan_cache_dir)
         run = eng.make_executor(
-            plan, {"weight": np.asarray(weight, np.float32)},
+            plan, static,
             **_executor_kwargs(backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,
                    _state_key="dist")
@@ -232,14 +275,24 @@ class ConnectedComponents(_FixpointApp):
                    lane_width: int = 128, backend: str = "jax",
                    cost: CostModel | None = None, fused: bool = True,
                    stage_b: str = "auto", interpret: bool | None = None,
-                   plan_cache_dir: str | None = None
+                   plan_cache_dir: str | None = None,
+                   tune: bool = False,
+                   tune_cache_dir: str | None = None
                    ) -> "ConnectedComponents":
         seed = cc_seed()
-        cost = cost or CostModel(lane_width=lane_width)
         s = np.concatenate([np.asarray(src), np.asarray(dst)])
         d = np.concatenate([np.asarray(dst), np.asarray(src)])
-        plan = _build(seed, {"dst": d, "src": s},
-                      num_nodes, num_nodes, cost, plan_cache_dir)
+        access = {"dst": d, "src": s}
+        if backend == "auto" or tune:
+            labels = jnp.arange(num_nodes, dtype=jnp.int32)
+            plan, run, tuning = _autotune_build(
+                seed, access, num_nodes, {}, "label", labels,
+                plan_cache_dir, tune_cache_dir, lane_width)
+            return cls(plan=plan, num_nodes=num_nodes, _run=run,
+                       _state_key="label", tuning=tuning)
+        cost = cost or CostModel(lane_width=lane_width)
+        plan = _build(seed, access, num_nodes, num_nodes, cost,
+                      plan_cache_dir)
         run = eng.make_executor(plan, {}, **_executor_kwargs(
             backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,

@@ -19,6 +19,7 @@ import dataclasses
 import hashlib
 import os
 import tempfile
+import warnings
 
 import numpy as np
 
@@ -31,8 +32,21 @@ try:                                    # optional: smaller files when present
 except ImportError:                     # pragma: no cover - env dependent
     _zstd = None
 
-_MAGIC_ZSTD = b"IUP1Z"
-_MAGIC_RAW = b"IUP1R"
+# v2 file layout: 5-byte magic + 16-byte blake2b checksum of the raw
+# msgpack payload + body.  The checksum turns silent bit-rot (which could
+# otherwise msgpack-parse into a structurally-plausible but WRONG plan)
+# into a detected corruption -> cache rebuild.  v1 files (no checksum)
+# are still readable; any *other* version magic is rejected, which the
+# cache layer treats as "rebuild from scratch".
+_MAGIC_ZSTD = b"IUP2Z"
+_MAGIC_RAW = b"IUP2R"
+_MAGIC_ZSTD_V1 = b"IUP1Z"
+_MAGIC_RAW_V1 = b"IUP1R"
+_CHECKSUM_BYTES = 16
+
+
+def _payload_checksum(raw: bytes) -> bytes:
+    return hashlib.blake2b(raw, digest_size=_CHECKSUM_BYTES).digest()
 
 _ARRAYS = ("window_ids", "lane_slot", "lane_offset", "seg_ids",
            "gather_idx", "valid", "flat_perm", "head_pos", "head_rows")
@@ -70,35 +84,89 @@ def save_plan(path: str, plan: BlockPlan):
                    for k in _ARRAYS},
     }
     raw = msgpack.packb(payload, use_bin_type=True)
+    check = _payload_checksum(raw)
     if _zstd is not None:
-        blob = _MAGIC_ZSTD + _zstd.ZstdCompressor(level=3).compress(raw)
+        blob = _MAGIC_ZSTD + check + \
+            _zstd.ZstdCompressor(level=3).compress(raw)
     else:
-        blob = _MAGIC_RAW + raw
+        blob = _MAGIC_RAW + check + raw
     with open(path, "wb") as f:
         f.write(blob)
+
+
+def _decompress(path: str, body: bytes) -> bytes:
+    if _zstd is None:                   # pragma: no cover - env dependent
+        raise RuntimeError(
+            f"{path} is zstd-compressed but 'zstandard' is unavailable")
+    return _zstd.ZstdDecompressor().decompress(body)
+
+
+def _validate_payload(p: dict) -> None:
+    """Structural consistency of a deserialized plan payload — a
+    truncated or bit-flipped v1 file (no checksum) can parse into
+    plausible-looking msgpack, and a wrong plan silently corrupts every
+    result built on it, so the invariants the engine relies on are
+    checked before a cached plan is accepted."""
+    for req in ("seed", "scalars", "classes", "stats", "arrays"):
+        if req not in p:
+            raise ValueError(f"plan payload missing {req!r}")
+    if p["seed"] not in _SEEDS:
+        raise ValueError(f"unknown seed {p['seed']!r}")
+    sc = p["scalars"]
+    for req in _SCALARS:
+        if req not in sc:
+            raise ValueError(f"plan scalars missing {req!r}")
+    b, n = int(sc["num_blocks"]), int(sc["lane_width"])
+    arr = p["arrays"]
+    for req in _ARRAYS:
+        if req not in arr:
+            raise ValueError(f"plan arrays missing {req!r}")
+    shapes = {k: tuple(arr[k]["shape"]) for k in _ARRAYS}
+    if shapes["flat_perm"] != (b * n,):
+        raise ValueError(f"flat_perm shape {shapes['flat_perm']} != ({b*n},)")
+    for k in ("lane_slot", "lane_offset", "seg_ids", "gather_idx", "valid"):
+        if shapes[k] != (b, n):
+            raise ValueError(f"{k} shape {shapes[k]} != ({b}, {n})")
+    if shapes["head_pos"] != shapes["head_rows"]:
+        raise ValueError("head_pos/head_rows length mismatch")
+    classes = p["classes"]
+    if not classes:
+        raise ValueError("plan has no pattern classes")
+    stops = [c[4] for c in classes]
+    starts = [c[3] for c in classes]
+    if starts[0] != 0 or stops[-1] != b or \
+            any(a != s for a, s in zip(stops, starts[1:])):
+        raise ValueError("pattern classes do not tile [0, num_blocks)")
+    for k in _ARRAYS:
+        want = np.prod(shapes[k], dtype=np.int64) * \
+            np.dtype(arr[k]["dtype"]).itemsize
+        if len(arr[k]["data"]) != want:
+            raise ValueError(f"{k}: byte length {len(arr[k]['data'])} != "
+                             f"{int(want)}")
 
 
 def load_plan(path: str) -> BlockPlan:
     msgpack = _msgpack()
     with open(path, "rb") as f:
         blob = f.read()
-    magic, body = blob[:5], blob[5:]
-    if magic == _MAGIC_ZSTD:
-        if _zstd is None:               # pragma: no cover - env dependent
-            raise RuntimeError(
-                f"{path} is zstd-compressed but 'zstandard' is unavailable")
-        raw = _zstd.ZstdDecompressor().decompress(body)
-    elif magic == _MAGIC_RAW:
-        raw = body
+    magic, rest = blob[:5], blob[5:]
+    if magic in (_MAGIC_ZSTD, _MAGIC_RAW):
+        check, body = rest[:_CHECKSUM_BYTES], rest[_CHECKSUM_BYTES:]
+        raw = _decompress(path, body) if magic == _MAGIC_ZSTD else body
+        if _payload_checksum(raw) != check:
+            raise ValueError(f"{path}: checksum mismatch (corrupt plan file)")
+    elif magic in (_MAGIC_ZSTD_V1, _MAGIC_RAW_V1):
+        raw = _decompress(path, rest) if magic == _MAGIC_ZSTD_V1 else rest
     elif blob[:4] == b"\x28\xb5\x2f\xfd":
         # legacy format: the whole file is one bare zstd frame
-        if _zstd is None:               # pragma: no cover - env dependent
-            raise RuntimeError(
-                f"{path} is zstd-compressed but 'zstandard' is unavailable")
-        raw = _zstd.ZstdDecompressor().decompress(blob)
+        raw = _decompress(path, blob)
     else:
-        raise ValueError(f"{path}: not a plan file (bad magic {magic!r})")
+        raise ValueError(f"{path}: not a readable plan file "
+                         f"(magic {magic!r}; this build reads "
+                         f"{_MAGIC_RAW.decode()}/{_MAGIC_RAW_V1.decode()} "
+                         "families)")
     p = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    _validate_payload(p)
     arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(
         v["shape"]) for k, v in p["arrays"].items()}
     classes = [PatternClass(*c) for c in p["classes"]]
@@ -144,6 +212,13 @@ def _array_fingerprint(a: np.ndarray) -> bytes:
     return np.array([h1, h2, np.uint64(v.size)], dtype=np.uint64).tobytes()
 
 
+def array_fingerprint(a: np.ndarray) -> bytes:
+    """Public alias of the 128-bit access-array fingerprint — shared by
+    the plan cache key and the tuning cache key (repro.tune.cache), so
+    both caches agree on what "the same matrix" means."""
+    return _array_fingerprint(a)
+
+
 def plan_digest(seed_name: str, access: dict, out_len: int, data_len: int,
                 cost: CostModel) -> str:
     """Cache key: digest of everything ``build_plan`` consumes, so two
@@ -180,8 +255,16 @@ def cached_build_plan(seed, access: dict, out_len: int, data_len: int,
     if os.path.exists(path):
         try:
             return load_plan(path)
-        except Exception:
-            pass                        # corrupt/stale entry: rebuild below
+        except Exception as e:
+            # corrupt / truncated / other-version entry: warn, drop the
+            # bad file, and rebuild — a cache may only skip work, never
+            # crash the build or change its result.
+            warnings.warn(f"plan cache entry {path} unreadable ({e!r}); "
+                          "rebuilding plan from scratch", RuntimeWarning)
+            try:
+                os.unlink(path)
+            except OSError:             # pragma: no cover - racing unlink
+                pass
     plan = build_plan(seed, access, out_len, data_len, cost=cost)
     os.makedirs(cache_dir, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")

@@ -9,6 +9,12 @@ merged write-back.
 
 Reuses the 1-D BlockPlan verbatim: the plan is a property of the access
 arrays only (the paper's point) — the value rank is an execution detail.
+The executor itself is a row-vector variant of the XLA path (2-D lanes
+don't fit ``engine.make_executor``'s scalar-lane launches yet), but the
+*interface* is at parity with :class:`repro.core.apps.SpMV`: ``backend``
+/ ``fused`` / ``plan_cache_dir`` kwargs, plus ``backend="auto"`` /
+``tune=True`` input-adaptive selection over the fused and per-class
+launch lists via :mod:`repro.tune`.
 """
 from __future__ import annotations
 
@@ -19,8 +25,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
-from repro.core.plan import BlockPlan, CostModel, build_plan
+from repro.core.plan import BlockPlan, CostModel
 from repro.core.seed import spmv_seed
+
+
+def _make_run(plan: BlockPlan, val_exec: jnp.ndarray, fused: bool):
+    """Build the jitted 2-D executor for one launch-list choice.
+
+    ``fused=True`` runs the merged op-group launch list
+    (``engine.fused_xla_classes`` — same legality argument as the 1-D
+    path: groups gather directly through the post-sort ``gather_idx`` and
+    each block gets exactly its class's ladder depth); ``fused=False``
+    keeps one launch per pattern class.
+    """
+    seed = plan.seed
+    gidx = jnp.asarray(plan.gather_idx, jnp.int32)              # (Bl,N)
+    head_pos = jnp.asarray(plan.head_pos)
+    head_rows = jnp.asarray(plan.head_rows)
+    seg_ids = jnp.asarray(plan.seg_ids)
+    launch_list = eng.fused_xla_classes(plan) if fused else plan.classes
+    # static per-launch op flags drive the same specialized reduce
+    classes = [(c.op_flag, c.start, c.stop) for c in launch_list]
+    reduce = seed.reduce
+
+    @jax.jit
+    def run(bmat, y_init):
+        d = bmat.shape[1]
+        parts = []
+        for op_flag, s0, s1 in classes:
+            rowsv = bmat[gidx[s0:s1]]                   # (Bc, N, D) rows
+            term = val_exec[s0:s1][:, :, None].astype(bmat.dtype) * rowsv
+            term = _segmented_reduce_2d(term, seg_ids[s0:s1], op_flag,
+                                        reduce=reduce)
+            parts.append(term)
+        lanes = jnp.concatenate(parts, 0)               # (Bl, N, D)
+        hv = lanes.reshape(-1, d)[head_pos]
+        return y_init.at[head_rows].add(hv.astype(y_init.dtype))
+
+    return run
 
 
 @dataclasses.dataclass
@@ -28,39 +70,57 @@ class SpMM:
     plan: BlockPlan
     shape: tuple[int, int]
     _run: object
+    tuning: object | None = None   # TuningResult when built via backend="auto"
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
                  shape: tuple[int, int], lane_width: int = 128,
-                 cost: CostModel | None = None) -> "SpMM":
+                 backend: str = "jax",
+                 cost: CostModel | None = None,
+                 fused: bool = True,
+                 plan_cache_dir: str | None = None,
+                 tune: bool = False,
+                 tune_cache_dir: str | None = None) -> "SpMM":
+        from repro.core import planio
+        if backend not in ("jax", "auto"):
+            raise ValueError(
+                f"SpMM supports backend='jax' or 'auto' (got {backend!r}); "
+                "the 2-D value path has no pallas/segsum form yet")
         seed = spmv_seed()
+        access = {"row": rows, "col": cols}
+        vals = np.asarray(vals)
+        if backend == "auto" or tune:
+            from repro.tune import Candidate, autotune
+            space = [Candidate(backend="jax", fused=f, lane_width=lane_width)
+                     for f in (True, False)]
+            rng = np.random.default_rng(0)
+            b_ex = jnp.asarray(rng.standard_normal(
+                (shape[1], 8)).astype(np.float32))
+            y0 = jnp.zeros((shape[0], 8), jnp.float32)
+            oracle = y0.at[jnp.asarray(np.asarray(rows))].add(
+                jnp.asarray(vals)[:, None]
+                * b_ex[jnp.asarray(np.asarray(cols))])
+
+            def factory(plan, cand, static_data, elem_exec):
+                run2d = _make_run(plan, elem_exec["value"], cand.fused)
+                return lambda mutable, y_init: run2d(mutable["b"], y_init)
+
+            plan, run, result = autotune(
+                seed, access, shape[0], shape[1], {"value": vals},
+                {"b": b_ex}, y0, space=space,
+                tune_cache_dir=tune_cache_dir,
+                plan_cache_dir=plan_cache_dir,
+                exec_factory=factory, oracle=oracle)
+            return cls(plan=plan, shape=shape,
+                       _run=lambda bmat, y: run({"b": bmat}, y),
+                       tuning=result)
         cost = cost or CostModel(lane_width=lane_width)
-        plan = build_plan(seed, {"row": rows, "col": cols},
-                          out_len=shape[0], data_len=shape[1], cost=cost)
-        val_exec = eng.reorder_elementwise(plan, np.asarray(vals))  # (Bl,N)
-        gidx = jnp.asarray(plan.gather_idx, jnp.int32)              # (Bl,N)
-        head_pos = jnp.asarray(plan.head_pos)
-        head_rows = jnp.asarray(plan.head_rows)
-        seg_ids = jnp.asarray(plan.seg_ids)
-        n = plan.lane_width
-
-        # static per-class op flags drive the same specialized reduce
-        classes = [(c.op_flag, c.start, c.stop) for c in plan.classes]
-
-        @jax.jit
-        def run(bmat, y_init):
-            d = bmat.shape[1]
-            parts = []
-            for op_flag, s0, s1 in classes:
-                rowsv = bmat[gidx[s0:s1]]                   # (Bc, N, D) rows
-                term = val_exec[s0:s1][:, :, None].astype(bmat.dtype) * rowsv
-                term = _segmented_reduce_2d(term, seg_ids[s0:s1], op_flag)
-                parts.append(term)
-            lanes = jnp.concatenate(parts, 0)               # (Bl, N, D)
-            hv = lanes.reshape(-1, d)[head_pos]
-            return y_init.at[head_rows].add(hv.astype(y_init.dtype))
-
-        return cls(plan=plan, shape=shape, _run=run)
+        plan = planio.cached_build_plan(seed, access, out_len=shape[0],
+                                        data_len=shape[1], cost=cost,
+                                        cache_dir=plan_cache_dir)
+        val_exec = eng.reorder_elementwise(plan, vals)              # (Bl,N)
+        return cls(plan=plan, shape=shape,
+                   _run=_make_run(plan, val_exec, fused))
 
     def matmat(self, bmat: jnp.ndarray,
                y_init: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -70,8 +130,20 @@ class SpMM:
 
 
 def _segmented_reduce_2d(term: jnp.ndarray, seg: jnp.ndarray,
-                         op_flag: int) -> jnp.ndarray:
-    """(Bc, N, D) log-step shift-reduce along lanes (add only)."""
+                         op_flag: int, reduce: str = "add") -> jnp.ndarray:
+    """(Bc, N, D) log-step shift-reduce along lanes.
+
+    Add-only for now: the 2-D ladder pads shifted lanes with zeros and
+    the write-back accumulates with ``.add``, which is WRONG for any
+    other reduce — refuse loudly rather than silently adding (the
+    semiring SpMM generalization tracks DESIGN.md §3a).
+    """
+    if reduce != "add":
+        raise ValueError(
+            f"SpMM segmented reduce supports only reduce='add' (got "
+            f"{reduce!r}): the 2-D ladder pads with 0 and the write-back "
+            "scatter-adds, so a non-add semiring would silently produce "
+            "wrong results. Semiring SpMM is not implemented yet.")
     from repro.core import feature_table as ft
     bc, n, d = term.shape
     if op_flag == ft.FULL_REDUCE:

@@ -1,0 +1,23 @@
+"""repro.tune — input-adaptive variant selection (autotuning subsystem).
+
+The paper's thesis is that irregular patterns are unknown until runtime,
+so the right code variant must be decided *per input*.  This package is
+that decision layer for the whole engine: a declarative candidate space
+with platform/seed validity rules (:mod:`~repro.tune.space`), an
+analytical pre-pruner over feature-table statistics
+(:mod:`~repro.tune.cost`), an on-device measurement harness
+(:mod:`~repro.tune.search`), and a persistent, content-addressed tuning
+cache (:mod:`~repro.tune.cache`) so a warm process picks the tuned
+configuration without re-measuring.
+
+Applications opt in with ``backend="auto"`` (or ``tune=True``) on
+``SpMV.from_coo`` / ``SpMM.from_coo`` / ``PageRank.from_edges`` and the
+``core.graphs`` drivers.
+"""
+from repro.tune.cache import load_entry, store_entry, tuning_key  # noqa: F401
+from repro.tune.cost import (PlanFeatures, plan_features,  # noqa: F401
+                             predict_us, rank_candidates)
+from repro.tune.search import (Measurement, TuningResult,  # noqa: F401
+                               autotune, measurement_count)
+from repro.tune.space import (Candidate, candidate_space,  # noqa: F401
+                              space_signature)

@@ -1,0 +1,87 @@
+"""Persistent tuning cache: warm processes skip re-measurement.
+
+The tuned choice is a property of (matrix, seed, platform, toolchain,
+candidate menu) — nothing else.  The cache key is therefore a blake2b
+digest over exactly those fields:
+
+* the 128-bit position-sensitive multilinear fingerprint of every
+  immutable access array (:func:`repro.core.planio.array_fingerprint` —
+  the same content-addressing the plan cache uses, so two logically equal
+  matrices share a tuning entry and any content/permutation change
+  misses),
+* the seed signature (name + reduce op) and the output/data lengths,
+* the platform (``cpu``/``tpu``/``gpu``) and ``jax.__version__`` — a
+  choice measured on one device generation or XLA release must never be
+  replayed on another,
+* the candidate-space signature, so widening the menu re-tunes.
+
+Entries are human-readable JSON (no optional deps), published with the
+temp-file + ``os.replace`` atomic-rename idiom; a corrupt or
+schema-mismatched entry is discarded with a warning and re-tuned — the
+cache can only skip measurements, never change the chosen semantics.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import warnings
+
+SCHEMA = "tune.v1"
+
+
+def tuning_key(seed_name: str, reduce: str, access: dict, out_len: int,
+               data_len: int, platform: str, space_sig: str,
+               extra: str = "") -> str:
+    import jax
+    from repro.core import planio
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"{SCHEMA}|{seed_name}|{reduce}|{out_len}|{data_len}|"
+             f"{platform}|{jax.__version__}|{space_sig}|{extra}".encode())
+    for k in sorted(access):
+        h.update(f"|{k}|".encode())
+        h.update(planio.array_fingerprint(access[k]))
+    return h.hexdigest()
+
+
+def entry_path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"tune-{key}.json")
+
+
+def load_entry(cache_dir: str, key: str) -> dict | None:
+    """The stored tuning decision, or None (miss / unreadable / other
+    schema).  Never raises: a cache problem costs a re-tune, not a run."""
+    path = entry_path(cache_dir, key)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path, "r") as f:
+            entry = json.load(f)
+        if entry.get("schema") != SCHEMA or "choice" not in entry:
+            raise ValueError(f"schema {entry.get('schema')!r} != {SCHEMA}")
+        return entry
+    except Exception as e:
+        warnings.warn(f"tuning cache entry {path} unreadable ({e!r}); "
+                      "re-tuning", RuntimeWarning)
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+        return None
+
+
+def store_entry(cache_dir: str, key: str, payload: dict) -> None:
+    """Atomic publish (write-to-temp + rename): concurrent tuners of the
+    same matrix race benignly — last writer wins with a complete file."""
+    os.makedirs(cache_dir, exist_ok=True)
+    payload = {"schema": SCHEMA, "key": key, **payload}
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, entry_path(cache_dir, key))
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)

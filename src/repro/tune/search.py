@@ -1,0 +1,270 @@
+"""Measurement-driven variant search (the tuner's ground truth).
+
+The cost model (:mod:`repro.tune.cost`) only *prunes*; the winner is
+picked by timing real executors on the real device with the real plan.
+The harness keeps the tuning bill small by construction:
+
+* candidates that share a :attr:`Candidate.plan_key` share ONE plan build
+  and ONE Data Transfer reorder (``engine.reorder_static``) — the plan is
+  the expensive analysis, the candidates on top of it are cheap,
+* plan builds go through the content-addressed plan cache when a
+  ``plan_cache_dir`` is given, so even a cold *tuning* run reuses warm
+  *plans*,
+* the analytical top-K cut bounds the number of compile+measure cycles,
+* a warm tuning cache (:mod:`repro.tune.cache`) skips the measurement
+  phase entirely — ``measurement_count()`` lets tests and benchmarks
+  assert exactly that, mirroring ``graphs.plan_build_count()``.
+
+Every measured candidate's warmup output is checked against the
+reference-oracle output before its timing can compete: a variant that
+cannot reproduce the semantics (however fast) is rejected with a
+warning, never chosen.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+
+import jax
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.seed import CodeSeed, reference_execute
+from repro.tune import cache as tcache
+from repro.tune import cost as tcost
+from repro.tune import space as tspace
+from repro.tune.space import Candidate
+
+_measurements = 0
+
+
+def measurement_count() -> int:
+    """Total timed candidate measurements made by this module — a warm
+    tuning-cache hit must leave this counter unchanged."""
+    return _measurements
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    candidate: Candidate
+    us_per_call: float
+    predicted_us: float
+    ok: bool                  # matched the oracle output
+
+    def to_dict(self) -> dict:
+        return {"candidate": self.candidate.to_dict(),
+                "us_per_call": round(self.us_per_call, 2),
+                "predicted_us": round(self.predicted_us, 2),
+                "ok": self.ok}
+
+
+@dataclasses.dataclass
+class TuningResult:
+    best: Candidate
+    best_us: float | None          # None on a warm cache hit
+    measurements: list             # [] on a warm cache hit
+    cache_hit: bool
+    key: str | None                # tuning-cache key (None when uncached)
+    platform: str
+    features: dict                 # plan_key -> PlanFeatures (measured run)
+    plans_built: int = 1           # distinct plans constructed while tuning
+
+    @property
+    def num_measured(self) -> int:
+        return len(self.measurements)
+
+    def choice_dict(self) -> dict:
+        return self.best.to_dict()
+
+
+def _build_plan(seed, access, out_len, data_len, cand: Candidate,
+                plan_cache_dir):
+    from repro.core import planio
+    return planio.cached_build_plan(seed, access, out_len, data_len,
+                                    cost=cand.cost_model(),
+                                    cache_dir=plan_cache_dir)
+
+
+def _default_exec_factory(plan, cand: Candidate, static_data, elem_exec):
+    return eng.make_executor(plan, static_data, backend=cand.backend,
+                             fused=cand.fused, stage_b=cand.stage_b,
+                             elem_exec=elem_exec)
+
+
+def _outputs_match(got, want) -> bool:
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if got.shape != want.shape or got.dtype != want.dtype:
+        return False
+    if np.issubdtype(got.dtype, np.inexact):
+        return bool(np.allclose(got, want, rtol=1e-4, atol=1e-5))
+    return bool(np.array_equal(got, want))
+
+
+def _timed_round(run, mutable, out_init, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run(mutable, out_init)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def measure_paired(runs: list, mutable, out_init, warmup: int = 1,
+                   iters: int = 5, rounds: int = 12,
+                   ref_index: int = 0) -> list[float]:
+    """Steady-state microseconds per call for a list of executors — the
+    one measurement discipline shared by the tuner and the benchmark
+    harness (``benchmarks.paper_tables``), so their numbers stay
+    comparable.
+
+    All executors are warmed first, then timed in many SHORT rounds with
+    RANDOM within-round order (a deterministic rotation's short period
+    can alias with periodic system noise like timer ticks and couple
+    specific executors to the noisy slots).  The reported number is a
+    PAIRED estimate: each executor's per-round ratio against
+    ``runs[ref_index]``'s sample *from the same round*, median over
+    rounds, scaled by the reference's min round.  Under the heavy
+    scheduler drift of a shared machine, absolute per-executor minima
+    were observed to disperse 30%+ between *identical* programs (flipping
+    near-tie selections); paired same-round ratios cancel the drift
+    because both sides of every ratio ran within milliseconds of each
+    other.  The sample size adapts to ~1 ms of work per timed sample so
+    fast calls (tens of us) are not dominated by per-sample jitter."""
+    for run in runs:
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(run(mutable, out_init))
+    n = len(runs)
+    samples = [[] for _ in range(n)]
+    t1 = min(_timed_round(runs[ref_index], mutable, out_init, 3)
+             for _ in range(5))
+    iters = int(min(max(iters, 1000.0 / max(t1, 1.0)), 64))
+    shuf = np.random.default_rng(12345)
+    for r in range(max(rounds, 1)):
+        for j in shuf.permutation(n):
+            samples[j].append(_timed_round(runs[j], mutable, out_init,
+                                           iters))
+    ref = np.asarray(samples[ref_index])
+    t_ref = float(ref.min())
+    return [t_ref * float(np.median(np.asarray(s) / ref)) for s in samples]
+
+
+def _measure_all(runs: list, mutable, out_init, warmup: int, iters: int,
+                 rounds: int = 12) -> list[float]:
+    """:func:`measure_paired` plus the measurement accounting the warm
+    tuning-cache guarantee is asserted against."""
+    global _measurements
+    out = measure_paired(runs, mutable, out_init, warmup, iters, rounds)
+    _measurements += len(runs)
+    return out
+
+
+def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
+             static_data: dict, mutable_example: dict, out_init,
+             *, space: list | None = None, platform: str | None = None,
+             lane_widths: tuple | None = None,
+             top_k: int = 4, warmup: int = 1, iters: int = 5,
+             tune_cache_dir: str | None = None,
+             plan_cache_dir: str | None = None,
+             allow_interpret: bool = False, force: bool = False,
+             exec_factory=None, oracle="reference"):
+    """Pick the best execution variant for this input; return
+    ``(plan, run, TuningResult)`` where ``run(mutable, out_init)`` is the
+    tuned jitted executor.
+
+    ``mutable_example`` / ``out_init`` are representative inputs used for
+    the timed calls (and the oracle check).  ``oracle="reference"``
+    derives the expected output from the seed's scatter oracle;
+    pass an explicit array for custom executors, or ``None`` to skip the
+    check.  ``force=True`` ignores (but still refreshes) the tuning
+    cache.
+    """
+    platform = platform or tspace.default_platform()
+    if space is None:
+        space = tspace.candidate_space(
+            seed, platform=platform, allow_interpret=allow_interpret,
+            lane_widths=lane_widths if lane_widths else (128,))
+    if not space:
+        raise ValueError("empty candidate space")
+    if exec_factory is None:
+        exec_factory = _default_exec_factory
+    sig = tspace.space_signature(space)
+
+    key = None
+    if tune_cache_dir is not None:
+        key = tcache.tuning_key(seed.name, seed.reduce, access, out_len,
+                                data_len, platform, sig)
+        if not force:
+            entry = tcache.load_entry(tune_cache_dir, key)
+            if entry is not None:
+                best = Candidate.from_dict(entry["choice"])
+                plan = _build_plan(seed, access, out_len, data_len, best,
+                                   plan_cache_dir)
+                elem_exec = eng.reorder_static(plan, static_data)
+                run = exec_factory(plan, best, static_data, elem_exec)
+                return plan, run, TuningResult(
+                    best=best, best_us=None, measurements=[],
+                    cache_hit=True, key=key, platform=platform,
+                    features={}, plans_built=1)
+
+    # ---- one plan (and one Data Transfer) per distinct plan key
+    plans, elems, features = {}, {}, {}
+    for c in space:
+        if c.plan_key not in plans:
+            plan = _build_plan(seed, access, out_len, data_len, c,
+                               plan_cache_dir)
+            plans[c.plan_key] = plan
+            elems[c.plan_key] = eng.reorder_static(plan, static_data)
+            features[c.plan_key] = tcost.plan_features(plan)
+
+    ranked = tcost.rank_candidates(space, features, platform, top_k=top_k)
+
+    if oracle == "reference":
+        data = dict(static_data)
+        data.update(mutable_example)
+        oracle = reference_execute(seed, access, data, out_init)
+
+    # build + warmup + oracle-check every ranked candidate, then time them
+    # all round-robin so no candidate is charged for its slot in the loop
+    built, runs = [], {}
+    for cand, predicted in ranked:
+        plan = plans[cand.plan_key]
+        run = exec_factory(plan, cand, static_data, elems[cand.plan_key])
+        ok = True
+        if oracle is not None:
+            ok = _outputs_match(run(mutable_example, out_init), oracle)
+            if not ok:
+                warnings.warn(
+                    f"tuning candidate {cand.label} diverges from the "
+                    "oracle output; rejected", RuntimeWarning)
+        built.append((cand, predicted, ok, run))
+        runs[cand] = run
+    times = _measure_all([b[3] for b in built], mutable_example, out_init,
+                         warmup, iters)
+    measurements = [Measurement(candidate=cand, us_per_call=us,
+                                predicted_us=predicted, ok=ok)
+                    for (cand, predicted, ok, _), us in zip(built, times)]
+
+    viable = [m for m in measurements if m.ok]
+    if not viable:
+        raise RuntimeError(
+            "autotune: every measured candidate diverged from the oracle "
+            f"({[m.candidate.label for m in measurements]})")
+    best_m = min(viable, key=lambda m: m.us_per_call)
+    best = best_m.candidate
+
+    if tune_cache_dir is not None:
+        tcache.store_entry(tune_cache_dir, key, {
+            "choice": best.to_dict(),
+            "best_us": round(best_m.us_per_call, 2),
+            "platform": platform,
+            "jax": jax.__version__,
+            "space": sig,
+            "measurements": [m.to_dict() for m in measurements],
+            "features": {str(k): f.to_dict() for k, f in features.items()},
+        })
+
+    return plans[best.plan_key], runs[best], TuningResult(
+        best=best, best_us=best_m.us_per_call, measurements=measurements,
+        cache_hit=False, key=key, platform=platform, features=features,
+        plans_built=len(plans))

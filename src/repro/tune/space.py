@@ -1,0 +1,142 @@
+"""Candidate variant space for the input-adaptive autotuner.
+
+The paper's core observation is that the right code variant is "unknown
+until runtime due to input dependence": the same engine exposes several
+genuinely different execution strategies (XLA fused vs per-class launch
+lists, the CPU-optimal single segment-reduce form, the Pallas TPU
+kernels, both write-backs, and the CostModel knobs that reshape the plan
+itself), and the measured winner flips across matrices.  This module
+declares that space once — a :class:`Candidate` is one fully-specified
+configuration — and applies the *validity rules* that keep the tuner from
+ever measuring a configuration that cannot run (or cannot run honestly)
+on the current platform/seed:
+
+* ``pallas`` is skipped off-TPU unless interpret-mode candidates are
+  explicitly requested (interpret timings are not wall-clock comparable);
+* ``segsum`` requires the reduce to have a ``jax.ops.segment_*`` form;
+* ``segsum`` ignores ``fused``/``stage_b`` (stage A+B collapse into one
+  segment reduce), so those axes are canonicalized away to keep the
+  space free of duplicate configurations;
+* ``stage_b="dense"`` only exists for the jax/pallas backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.plan import CostModel
+from repro.core.seed import CodeSeed
+
+# reduces with a jax.ops.segment_* lowering (engine's segsum backend)
+SEGMENT_REDUCES = frozenset({"add", "mul", "max", "min"})
+
+_BACKENDS = ("jax", "segsum", "pallas")
+_STAGE_BS = ("gather", "dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the variant space — everything needed to build an
+    executor: the plan shape (``lane_width``, ``max_windows_replace`` are
+    CostModel inputs, so they select which *plan* is built) and the
+    execution strategy on top of it."""
+
+    backend: str = "jax"               # "jax" | "segsum" | "pallas"
+    fused: bool = True
+    stage_b: str = "gather"            # "gather" | "dense"
+    lane_width: int = 128
+    max_windows_replace: int | None = None
+
+    @property
+    def plan_key(self) -> tuple:
+        """Candidates with equal plan keys share one BlockPlan (and the
+        reorder work that goes with it)."""
+        return (self.lane_width, self.max_windows_replace)
+
+    def cost_model(self) -> CostModel:
+        return CostModel(lane_width=self.lane_width,
+                         max_windows_replace=self.max_windows_replace)
+
+    @property
+    def label(self) -> str:
+        mode = "fused" if self.fused else "per_class"
+        cut = ("" if self.max_windows_replace is None
+               else f"/w{self.max_windows_replace}")
+        return f"{self.backend}/{mode}/{self.stage_b}/n{self.lane_width}{cut}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def default_platform() -> str:
+    import jax
+    return jax.devices()[0].platform
+
+
+def canonicalize(c: Candidate) -> Candidate:
+    """Collapse don't-care axes so the space holds no duplicate configs:
+    the segsum backend has a single form (stage A+B are one segment
+    reduce), so ``fused``/``stage_b`` are fixed to their defaults."""
+    if c.backend == "segsum":
+        return dataclasses.replace(c, fused=True, stage_b="gather")
+    return c
+
+
+def is_valid(c: Candidate, seed: CodeSeed, platform: str,
+             allow_interpret: bool = False) -> bool:
+    """The platform/seed validity rules (module docstring)."""
+    if c.backend not in _BACKENDS or c.stage_b not in _STAGE_BS:
+        return False
+    if c.lane_width < 2:
+        return False
+    if c.backend == "pallas" and platform != "tpu" and not allow_interpret:
+        return False
+    if c.backend == "segsum" and seed.reduce not in SEGMENT_REDUCES:
+        return False
+    return True
+
+
+def candidate_space(seed: CodeSeed, *, platform: str | None = None,
+                    backends: tuple = _BACKENDS,
+                    lane_widths: tuple = (128,),
+                    window_cutoffs: tuple = (None,),
+                    allow_interpret: bool = False) -> list["Candidate"]:
+    """Enumerate the valid, canonical candidate list for ``seed`` on
+    ``platform`` — the declarative product space filtered by
+    :func:`is_valid` and deduplicated through :func:`canonicalize`.
+
+    The default axes give 5 candidates on CPU (4 jax forms + segsum) and
+    add the two Pallas forms on TPU; widening ``lane_widths`` /
+    ``window_cutoffs`` multiplies the *plan* axis, which the search
+    harness shares per :attr:`Candidate.plan_key`.
+    """
+    platform = platform or default_platform()
+    out: list[Candidate] = []
+    seen: set[Candidate] = set()
+    for n in lane_widths:
+        for cut in window_cutoffs:
+            for backend in backends:
+                for fused in (True, False):
+                    for stage_b in _STAGE_BS:
+                        c = Candidate(backend=backend, fused=fused,
+                                      stage_b=stage_b, lane_width=n,
+                                      max_windows_replace=cut)
+                        if not is_valid(c, seed, platform, allow_interpret):
+                            continue
+                        c = canonicalize(c)
+                        if c in seen:
+                            continue
+                        seen.add(c)
+                        out.append(c)
+    return out
+
+
+def space_signature(candidates: list[Candidate]) -> str:
+    """Stable textual identity of a candidate list — part of the tuning
+    cache key, so a changed space (new backend, new knob) re-tunes instead
+    of replaying a choice made over a different menu."""
+    return ";".join(sorted(c.label for c in candidates))

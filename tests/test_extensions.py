@@ -40,6 +40,68 @@ def test_spmm_consistent_with_spmv():
     np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)
 
 
+def test_spmm_fused_matches_per_class():
+    """SpMM interface parity with SpMV: the fused op-group launch list
+    must reproduce the per-class launches (same gather, same ladder
+    depths, same write-back order)."""
+    m = G.power_law(512, 6)
+    rng = np.random.default_rng(3)
+    bmat = jnp.asarray(rng.standard_normal((m.shape[1], 8)).astype(
+        np.float32))
+    outs = []
+    for fused in (False, True):
+        sp = SpMM.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                           np.asarray(m.vals), m.shape, lane_width=32,
+                           fused=fused)
+        outs.append(np.asarray(sp.matmat(bmat)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_spmm_plan_cache_dir_and_backend_validation(tmp_path):
+    pytest.importorskip("msgpack")
+    m = G.banded(256, 3)
+    args = (np.asarray(m.rows), np.asarray(m.cols), np.asarray(m.vals),
+            m.shape)
+    sp1 = SpMM.from_coo(*args, lane_width=32,
+                        plan_cache_dir=str(tmp_path))
+    assert len(list(tmp_path.iterdir())) == 1      # plan published
+    sp2 = SpMM.from_coo(*args, lane_width=32,
+                        plan_cache_dir=str(tmp_path))  # warm load
+    bmat = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (m.shape[1], 4)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(sp1.matmat(bmat)),
+                                  np.asarray(sp2.matmat(bmat)))
+    with pytest.raises(ValueError, match="backend"):
+        SpMM.from_coo(*args, backend="segsum")
+
+
+def test_spmm_auto_selects_and_matches_oracle(tmp_path):
+    m = G.power_law(512, 6)
+    sp = SpMM.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, backend="auto",
+                       tune_cache_dir=str(tmp_path))
+    assert sp.tuning is not None and sp.tuning.num_measured > 0
+    bmat = np.random.default_rng(1).standard_normal(
+        (m.shape[1], 8)).astype(np.float32)
+    y = np.asarray(sp.matmat(jnp.asarray(bmat)))
+    yref = np.zeros((m.shape[0], 8), np.float64)
+    np.add.at(yref, np.asarray(m.rows),
+              np.asarray(m.vals, np.float64)[:, None]
+              * bmat[np.asarray(m.cols)])
+    np.testing.assert_allclose(y, yref, rtol=2e-4, atol=2e-4)
+
+
+def test_spmm_segmented_reduce_2d_rejects_non_add():
+    """Until semiring SpMM lands, a non-add reduce must fail loudly, not
+    silently accumulate with +."""
+    from repro.core.spmm import _segmented_reduce_2d
+    term = jnp.ones((2, 4, 3), jnp.float32)
+    seg = jnp.zeros((2, 4), jnp.int32)
+    for reduce in ("min", "max", "mul"):
+        with pytest.raises(ValueError, match="only reduce='add'"):
+            _segmented_reduce_2d(term, seg, 1, reduce=reduce)
+
+
 def test_plan_save_load_roundtrip(tmp_path):
     pytest.importorskip("msgpack")
     m = G.power_law(512, 6)

@@ -1,0 +1,159 @@
+"""Plan-cache robustness: corrupt, truncated, or other-version entries
+must fall back to a fresh ``build_plan`` with a warning — never crash and
+never return a wrong plan (the v2 format carries a payload checksum so
+silent bit-rot cannot parse into a plausible plan)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.plan import CostModel, build_plan
+from repro.core.seed import spmv_seed
+from repro.sparse import generators as G
+
+pytest.importorskip("msgpack")
+
+from repro.core import planio  # noqa: E402
+
+
+@pytest.fixture
+def cached(tmp_path):
+    m = G.power_law(512, 6)
+    access = {"row": np.asarray(m.rows), "col": np.asarray(m.cols)}
+    cost = CostModel(lane_width=32)
+    args = (spmv_seed(), access, m.shape[0], m.shape[1], cost)
+    plan = planio.cached_build_plan(*args, cache_dir=str(tmp_path))
+    [path] = list(tmp_path.iterdir())
+    return args, str(tmp_path), path, plan
+
+
+def _assert_same_plan(a, b):
+    for k in ("window_ids", "lane_slot", "lane_offset", "seg_ids",
+              "gather_idx", "valid", "flat_perm", "head_pos", "head_rows"):
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k), err_msg=k)
+    assert [(c.key, c.start, c.stop) for c in a.classes] == \
+        [(c.key, c.start, c.stop) for c in b.classes]
+
+
+def _expect_rebuild(cached_args, cache_dir, reference_plan):
+    args = cached_args
+    with pytest.warns(RuntimeWarning, match="rebuilding"):
+        plan = planio.cached_build_plan(*args, cache_dir=cache_dir)
+    _assert_same_plan(plan, reference_plan)
+    # the bad entry was replaced by a fresh publish: next hit is clean
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan2 = planio.cached_build_plan(*args, cache_dir=cache_dir)
+    _assert_same_plan(plan2, reference_plan)
+
+
+def test_bitflipped_entry_falls_back_to_rebuild(cached):
+    args, d, path, plan = cached
+    blob = bytearray(path.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    _expect_rebuild(args, d, plan)
+
+
+def test_bitflipped_checksum_falls_back_to_rebuild(cached):
+    args, d, path, plan = cached
+    blob = bytearray(path.read_bytes())
+    blob[5] ^= 0x01                     # first checksum byte
+    path.write_bytes(bytes(blob))
+    _expect_rebuild(args, d, plan)
+
+
+@pytest.mark.parametrize("keep", [0, 4, 21, 0.5])
+def test_truncated_entry_falls_back_to_rebuild(cached, keep):
+    args, d, path, plan = cached
+    blob = path.read_bytes()
+    n = int(len(blob) * keep) if isinstance(keep, float) else keep
+    path.write_bytes(blob[:n])
+    _expect_rebuild(args, d, plan)
+
+
+def test_other_version_magic_falls_back_to_rebuild(cached):
+    args, d, path, plan = cached
+    blob = path.read_bytes()
+    path.write_bytes(b"IUP9Z" + blob[5:])
+    _expect_rebuild(args, d, plan)
+
+
+def test_load_plan_raises_on_checksum_mismatch(cached):
+    _, _, path, _ = cached
+    blob = bytearray(path.read_bytes())
+    blob[-1] ^= 0x40
+    path.write_bytes(bytes(blob))
+    with pytest.raises(Exception):
+        planio.load_plan(str(path))
+
+
+def test_v1_entry_without_checksum_still_loads(cached):
+    """Forward compat: a v1-era file (no checksum) must keep loading."""
+    _, _, path, plan = cached
+    blob = path.read_bytes()
+    magic = blob[:5]
+    assert magic in (b"IUP2Z", b"IUP2R")
+    v1_magic = b"IUP1Z" if magic == b"IUP2Z" else b"IUP1R"
+    body = blob[5 + planio._CHECKSUM_BYTES:]
+    path.write_bytes(v1_magic + body)
+    _assert_same_plan(planio.load_plan(str(path)), plan)
+
+
+def test_validate_payload_catches_structural_corruption(cached):
+    """The structural validator (the only defense for checksum-less v1
+    payloads) rejects inconsistent scalars/arrays/classes."""
+    import copy
+
+    import msgpack
+    _, _, path, plan = cached
+    blob = path.read_bytes()
+    body = blob[5 + planio._CHECKSUM_BYTES:]
+    raw = body
+    if blob[:5] == b"IUP2Z":
+        import zstandard
+        raw = zstandard.ZstdDecompressor().decompress(body)
+    payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    planio._validate_payload(payload)    # pristine payload passes
+
+    bad = copy.deepcopy(payload)
+    bad["scalars"]["num_blocks"] += 1    # scalars vs arrays mismatch
+    with pytest.raises(ValueError):
+        planio._validate_payload(bad)
+
+    bad = copy.deepcopy(payload)
+    bad["classes"][0][4] += 1            # classes no longer tile [0, B)
+    with pytest.raises(ValueError):
+        planio._validate_payload(bad)
+
+    bad = copy.deepcopy(payload)
+    bad["arrays"]["flat_perm"]["data"] = \
+        bad["arrays"]["flat_perm"]["data"][:-8]   # truncated array bytes
+    with pytest.raises(ValueError):
+        planio._validate_payload(bad)
+
+    bad = copy.deepcopy(payload)
+    del bad["arrays"]["head_rows"]
+    with pytest.raises(ValueError):
+        planio._validate_payload(bad)
+
+
+def test_unreadable_entry_never_crosses_digests(cached, tmp_path):
+    """A corrupt entry for one matrix must not shadow another matrix's
+    cache slot (keys are content-addressed, files are per-digest)."""
+    args, d, path, plan = cached
+    m2 = G.banded(256, 3)
+    access2 = {"row": np.asarray(m2.rows), "col": np.asarray(m2.cols)}
+    plan2 = planio.cached_build_plan(spmv_seed(), access2, m2.shape[0],
+                                     m2.shape[1], CostModel(lane_width=32),
+                                     cache_dir=d)
+    path.write_bytes(b"garbage")
+    with pytest.warns(RuntimeWarning):
+        p1 = planio.cached_build_plan(*args, cache_dir=d)
+    _assert_same_plan(p1, plan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p2 = planio.cached_build_plan(spmv_seed(), access2, m2.shape[0],
+                                      m2.shape[1], CostModel(lane_width=32),
+                                      cache_dir=d)
+    _assert_same_plan(p2, plan2)
