@@ -1,16 +1,30 @@
 """Bench-regression guard: compare two BENCH_*.json files and fail when a
 checked-in speedup drops.
 
-``python -m benchmarks.check_regression OLD.json NEW.json [--min-ratio 0.9]``
+``python -m benchmarks.check_regression OLD.json NEW.json [--min-ratio 0.9]
+[--min-resident-speedup 1.0]``
 
-Every row carrying ``speedup_vs_per_class`` (the spmv_exec trajectory —
-the quantity the fused executor and the autotuner are accountable for) is
-matched across the two files by its identity columns; the guard fails if
-any matched row's new speedup is below ``min-ratio`` x its previous
-value.  Ratios of speedups (not raw microseconds) are compared on
-purpose: both modes of one row pair were timed interleaved in one
-process, so the ratio is robust to machine-to-machine absolute-speed
+Two row families are guarded, matched across the two files by their
+identity columns:
+
+* ``speedup_vs_per_class`` (the spmv_exec trajectory — what the fused
+  executor and the autotuner are accountable for), and
+* ``run_speedup_vs_host`` (the graph-bench resident-driver trajectory —
+  what the device-resident ``lax.while_loop`` / ``fori_loop`` drivers are
+  accountable for, DESIGN.md §7).
+
+The guard fails if any matched row's new speedup is below ``min-ratio`` x
+its previous value.  Ratios of speedups (not raw microseconds) are
+compared on purpose: both sides of one row pair were timed interleaved in
+one process, so the ratio is robust to machine-to-machine absolute-speed
 differences, which is what lets CI compare against the checked-in file.
+
+Additionally the NEW file's powerlaw jax-backend resident rows (the
+paper's headline irregular input on the portable-default backend) must
+show ``run_speedup_vs_host`` of at least ``--min-resident-speedup``
+(default 1.0): the resident driver must never lose to the host-stepped
+driver on the workload it exists for.  The floor fails loudly (never
+vacuously) if those rows disappear from a file that used to have them.
 
 Rows present on only one side (new datasets, new modes) are reported but
 never fail the guard — growth must not be punished.
@@ -21,17 +35,18 @@ import argparse
 import json
 import sys
 
-METRIC = "speedup_vs_per_class"
-_KEYS = ("bench", "dataset", "mode", "backend", "app", "lane_width")
+METRICS = ("speedup_vs_per_class", "run_speedup_vs_host")
+_KEYS = ("bench", "dataset", "mode", "backend", "app", "driver",
+         "lane_width")
 
 
-def _index(payload: dict) -> dict:
+def _index(payload: dict, metric: str) -> dict:
     out = {}
     for row in payload.get("timings", []):
-        if METRIC not in row:
+        if metric not in row:
             continue
         key = tuple((k, row.get(k)) for k in _KEYS if k in row)
-        out[key] = float(row[METRIC])
+        out[key] = float(row[metric])
     return out
 
 
@@ -39,51 +54,111 @@ def _fmt(key: tuple) -> str:
     return "/".join(str(v) for _, v in key)
 
 
-def check(old_path: str, new_path: str, min_ratio: float = 0.9) -> int:
-    with open(old_path) as f:
-        old = _index(json.load(f))
-    with open(new_path) as f:
-        new = _index(json.load(f))
-    if not old:
-        print(f"regression_guard: no {METRIC} rows in {old_path}; "
-              "nothing to compare")
-        return 0
+def _check_metric(metric: str, old: dict, new: dict,
+                  min_ratio: float) -> list:
     failures = []
     for key in sorted(old):
         if key not in new:
-            print(f"only_in_old,{_fmt(key)},{old[key]}")
+            print(f"only_in_old,{metric},{_fmt(key)},{old[key]}")
             continue
         ratio = new[key] / old[key] if old[key] else 1.0
         status = "OK" if ratio >= min_ratio else "REGRESSION"
-        print(f"{status},{_fmt(key)},old={old[key]:.3f},"
+        print(f"{status},{metric},{_fmt(key)},old={old[key]:.3f},"
               f"new={new[key]:.3f},ratio={ratio:.3f}")
         if ratio < min_ratio:
-            failures.append((key, old[key], new[key], ratio))
+            failures.append((metric, key, old[key], new[key], ratio))
     for key in sorted(set(new) - set(old)):
-        print(f"only_in_new,{_fmt(key)},{new[key]}")
+        print(f"only_in_new,{metric},{_fmt(key)},{new[key]}")
+    return failures
+
+
+def _check_resident_floor(new_payload: dict, floor: float
+                          ) -> tuple[list, int]:
+    """NEW-file absolute floor: resident must beat host on powerlaw.
+    Returns (failures, rows_checked) — the caller fails the guard if the
+    rows this floor exists for have silently disappeared.
+
+    Scoped to the portable-default ``jax`` backend rows on purpose: the
+    floor is an ABSOLUTE cross-machine claim (unlike the ratio guard it
+    has no old-file to cancel machine effects against), and only the jax
+    headline rows carry a margin (1.3x+) that holds across CPU classes —
+    segsum's resident margin on some graphs is within shared-runner
+    noise."""
+    failures = []
+    checked = 0
+    for row in new_payload.get("timings", []):
+        if "run_speedup_vs_host" not in row \
+                or row.get("dataset") != "powerlaw" \
+                or row.get("backend") != "jax":
+            continue
+        checked += 1
+        v = float(row["run_speedup_vs_host"])
+        name = (f"{row.get('dataset')}/{row.get('app')}/"
+                f"{row.get('backend')}")
+        status = "OK" if v >= floor else "RESIDENT_LOSS"
+        print(f"{status},resident_floor,{name},vs_host={v:.3f},"
+              f"floor={floor:.2f}")
+        if v < floor:
+            failures.append(("resident_floor", name, floor, v, v))
+    return failures, checked
+
+
+def check(old_path: str, new_path: str, min_ratio: float = 0.9,
+          min_resident_speedup: float = 1.0) -> int:
+    with open(old_path) as f:
+        old_payload = json.load(f)
+    with open(new_path) as f:
+        new_payload = json.load(f)
+    failures = []
+    checked = 0
+    for metric in METRICS:
+        old = _index(old_payload, metric)
+        new = _index(new_payload, metric)
+        if not old:
+            print(f"regression_guard: no {metric} rows in {old_path}; "
+                  "nothing to compare")
+            continue
+        checked += len(old)
+        failures += _check_metric(metric, old, new, min_ratio)
+    floor_failures, floor_checked = _check_resident_floor(
+        new_payload, min_resident_speedup)
+    failures += floor_failures
+    if floor_checked == 0 and _index(old_payload, "run_speedup_vs_host"):
+        # a graph-bench baseline guarantees resident rows exist: them
+        # vanishing from the new file must not pass the floor vacuously
+        failures.append(("resident_floor", "powerlaw/* (rows missing)",
+                         min_resident_speedup, 0.0, 0.0))
     if failures:
-        print(f"\nregression_guard: {len(failures)} row(s) fell below "
-              f"{min_ratio:.2f}x their previous {METRIC}:",
+        print(f"\nregression_guard: {len(failures)} row(s) failed:",
               file=sys.stderr)
-        for key, o, n, r in failures:
-            print(f"  {_fmt(key)}: {o:.3f} -> {n:.3f} ({r:.2f}x)",
+        for metric, key, o, n, r in failures:
+            name = _fmt(key) if isinstance(key, tuple) else key
+            print(f"  [{metric}] {name}: {o:.3f} -> {n:.3f} ({r:.2f}x)",
                   file=sys.stderr)
         return 1
-    print(f"regression_guard: {len(old)} row(s) checked, none below "
-          f"{min_ratio:.2f}x")
+    floor_note = (f" (resident floor {min_resident_speedup:.2f}x held on "
+                  f"{floor_checked} powerlaw row(s))" if floor_checked
+                  else "")
+    print(f"regression_guard: {checked} row(s) checked, none below "
+          f"{min_ratio:.2f}x{floor_note}")
     return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("old", help="baseline JSON (e.g. checked-in "
-                                "BENCH_spmv.json)")
+                                "BENCH_spmv.json / BENCH_graph.json)")
     ap.add_argument("new", help="freshly measured JSON")
     ap.add_argument("--min-ratio", type=float, default=0.9,
                     help="fail when new/old speedup falls below this "
                          "(default 0.9)")
+    ap.add_argument("--min-resident-speedup", type=float, default=1.0,
+                    help="fail when a NEW powerlaw resident row's "
+                         "run_speedup_vs_host falls below this "
+                         "(default 1.0)")
     args = ap.parse_args()
-    sys.exit(check(args.old, args.new, args.min_ratio))
+    sys.exit(check(args.old, args.new, args.min_ratio,
+                   args.min_resident_speedup))
 
 
 if __name__ == "__main__":

@@ -1,23 +1,35 @@
-"""Graph-application benchmarks: BFS / SSSP / CC per backend per graph class.
+"""Graph-application benchmarks: BFS / SSSP / CC / PageRank per backend
+per graph class, host-stepped vs device-resident drivers.
 
-Each row times one (app, backend, graph) cell of the paper's §7 graph
-evaluation: plan-build seconds (paid once per graph), per-sweep microseconds
-(the steady-state cost the paper's amortization argument buys), and the
-sweeps-to-convergence of the fixpoint driver.  ``plan_builds`` is asserted
-to be exactly 1 per app instance — the convergence driver must never
-rebuild a plan between sweeps.
+Each (app, backend, graph) cell emits TWO rows (``driver: host`` /
+``driver: resident``), both carrying the end-to-end ``run_ms`` of one
+whole convergence (or one ``PAGERANK_ITERS``-iteration power run) — the
+quantity the resident ``lax.while_loop`` / ``fori_loop`` drivers are
+accountable for (DESIGN.md §7).  The host row additionally records the
+steady-state ``us_per_sweep`` (the paper's per-sweep amortization
+number); the resident row records ``run_speedup_vs_host``, the ratio the
+regression guard (``benchmarks.check_regression``) pins: both drivers of
+one pair were timed in one process over the SAME executor and plan, so
+the ratio is robust to machine-to-machine absolute-speed differences.
+
+``plan_builds`` is asserted to be exactly 1 per fixpoint-app instance —
+neither driver may rebuild a plan between sweeps.
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import apps as AP
 from repro.core import graphs as GR
 from repro.sparse import generators as G
 
-APPS = ("bfs", "sssp", "cc")
+APPS = ("bfs", "sssp", "cc", "pagerank")
+FIXPOINT_APPS = ("bfs", "sssp", "cc")
+PAGERANK_ITERS = 20
 
 
 def _build(app: str, case, backend: str, lane_width: int,
@@ -30,8 +42,10 @@ def _build(app: str, case, backend: str, lane_width: int,
     if app == "sssp":
         return GR.SSSP.from_edges(case.src, case.dst, case.weight,
                                   case.num_nodes, **kw)
-    return GR.ConnectedComponents.from_edges(case.src, case.dst,
-                                             case.num_nodes, **kw)
+    if app == "cc":
+        return GR.ConnectedComponents.from_edges(case.src, case.dst,
+                                                 case.num_nodes, **kw)
+    return AP.PageRank.from_edges(case.src, case.dst, case.num_nodes, **kw)
 
 
 def _initial_state(app: str, inst) -> jnp.ndarray:
@@ -45,11 +59,36 @@ def _initial_state(app: str, inst) -> jnp.ndarray:
 
 
 def _time_sweep(inst, state, reps: int = 30) -> float:
+    """Steady-state microseconds per standalone sweep dispatch."""
     inst.sweep(state).block_until_ready()          # compile
     t0 = time.perf_counter()
     for _ in range(reps):
         inst.sweep(state).block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _time_run_pair(host_fn, res_fn, reps: int = 9
+                   ) -> tuple[float, float, float]:
+    """End-to-end milliseconds for the host and resident drivers, timed in
+    INTERLEAVED rounds, plus the paired per-round speedup.  Same
+    discipline as ``repro.tune.search.measure_paired``: both sides of
+    every ratio ran within milliseconds of each other, so scheduler drift
+    on a shared box cancels out of the speedup column even when it moves
+    the absolute numbers."""
+    jax.block_until_ready(host_fn())               # compile / warm caches
+    jax.block_until_ready(res_fn())
+    hs, rs = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(host_fn())
+        hs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(res_fn())
+        rs.append(time.perf_counter() - t0)
+    hs = np.asarray(hs)
+    rs = np.asarray(rs)
+    return (float(np.median(hs)) * 1e3, float(np.median(rs)) * 1e3,
+            float(np.median(hs / rs)))
 
 
 def bench_graph_apps(scale: str = "small",
@@ -58,13 +97,14 @@ def bench_graph_apps(scale: str = "small",
                      lane_width: int = 128,
                      tuned: bool = False,
                      tune_cache_dir: str | None = None) -> list[dict]:
-    """One row per (app, backend, graph class) — the BENCH_graph payload.
-    ``tuned=True`` adds one ``backend="auto"`` row per (app, graph) with
-    the chosen configuration and the cold/warm tuning measurement counts
-    (warm must be 0)."""
+    """Two rows (driver host/resident) per (app, backend, graph class) —
+    the BENCH_graph payload.  ``tuned=True`` adds ``backend="auto"`` pairs
+    per (app, graph) with the chosen configuration and the cold/warm
+    tuning measurement counts (warm must be 0)."""
     backends = tuple(backends) + (("pallas",) if pallas else ())
     if tuned:
         backends = backends + ("auto",)
+    reps = {"pallas": 5}
     rows = []
     for case in G.graph_suite(scale):
         # full convergence on the ring is diameter-bound (O(n) sweeps);
@@ -94,30 +134,73 @@ def bench_graph_apps(scale: str = "small",
                     inst = _build(app, case, backend, lane_width)
                 build_s = time.perf_counter() - t0
                 builds = GR.plan_build_count() - before
-                if backend != "auto":
+                if backend != "auto" and app in FIXPOINT_APPS:
                     # the convergence driver must never rebuild a plan;
                     # the auto path legitimately builds one per plan key
-                    # while tuning
+                    # while tuning (PageRank counts in apps, not here)
                     assert builds == 1, (app, case.name, builds)
-                state = _initial_state(app, inst)
-                us = _time_sweep(inst, state,
-                                 reps=5 if backend == "pallas" else 30)
-                inst._converge(state, max_sweeps)
-                rows.append({
+                base = {
                     "bench": "graph",
                     "app": app,
                     "backend": backend,
                     "dataset": case.name,
                     "num_nodes": case.num_nodes,
                     "num_edges": case.num_edges,
-                    "us_per_sweep": round(us, 1),
-                    "sweeps_run": inst.sweeps_run,
-                    # False when the max_sweeps cap truncated the run
-                    # (the diameter-bound ring): sweeps_run is then the
-                    # cap, not a convergence statistic
-                    "converged": inst.converged,
                     "plan_build_s": round(build_s, 4),
                     "plan_builds": builds,
-                    **tune_info,
-                })
+                }
+                if app == "pagerank":
+                    # PageRank builds its plans in core.apps / the tuner,
+                    # not through graphs._build — the graphs-module counter
+                    # would misreport 0 here, so the column is omitted
+                    del base["plan_builds"]
+                r = reps.get(backend, 7)
+                if app == "pagerank":
+                    us = _time_sweep(
+                        inst, jnp.full(case.num_nodes,
+                                       1.0 / max(case.num_nodes, 1),
+                                       jnp.float32),
+                        reps=reps.get(backend, 30))
+                    host_ms, res_ms, speedup = _time_run_pair(
+                        lambda: inst.run(PAGERANK_ITERS, driver="host"),
+                        lambda: inst.run(PAGERANK_ITERS,
+                                         driver="resident"), reps=r)
+                    rows.append({**base, "driver": "host",
+                                 "iters": PAGERANK_ITERS,
+                                 "us_per_sweep": round(us, 1),
+                                 "run_ms": round(host_ms, 3)})
+                    rows.append({**base, "driver": "resident",
+                                 "iters": PAGERANK_ITERS,
+                                 "run_ms": round(res_ms, 3),
+                                 "run_speedup_vs_host": round(speedup, 3),
+                                 **tune_info})
+                    continue
+                state = _initial_state(app, inst)
+                us = _time_sweep(inst, state, reps=reps.get(backend, 30))
+                host_ms, res_ms, speedup = _time_run_pair(
+                    lambda: inst._converge(state, max_sweeps,
+                                           driver="host"),
+                    lambda: inst._converge(state, max_sweeps,
+                                           driver="resident"), reps=r)
+                inst._converge(state, max_sweeps, driver="host")
+                host_rep = (inst.sweeps_run, inst.converged)
+                inst._converge(state, max_sweeps, driver="resident")
+                res_rep = (inst.sweeps_run, inst.converged)
+                # the two drivers must tell the same convergence story
+                assert host_rep == res_rep, (app, case.name,
+                                             host_rep, res_rep)
+                rows.append({**base, "driver": "host",
+                             "us_per_sweep": round(us, 1),
+                             "sweeps_run": host_rep[0],
+                             # False when the max_sweeps cap truncated the
+                             # run (the diameter-bound ring): sweeps_run is
+                             # then the cap, not a convergence statistic
+                             "converged": host_rep[1],
+                             "run_ms": round(host_ms, 3)})
+                rows.append({**base, "driver": "resident",
+                             "sweeps_run": res_rep[0],
+                             "converged": res_rep[1],
+                             "run_ms": round(res_ms, 3),
+                             "run_speedup_vs_host": round(speedup, 3),
+                             **tune_info})
     return rows

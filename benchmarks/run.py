@@ -9,9 +9,12 @@ plan-build seconds) — the file checked in as ``BENCH_spmv.json``.
 ``python -m benchmarks.run [--scale full] [--pallas] [--tuned]
 [--tune-cache DIR] [--json out.json]``
 
-``--graphs`` switches to the graph-application mode (BFS / SSSP / CC per
-backend per graph class, the paper's §7 graph side); its ``--json`` output
-is the file checked in as ``BENCH_graph.json``.
+``--graphs`` switches to the graph-application mode (BFS / SSSP / CC /
+PageRank per backend per graph class, the paper's §7 graph side), emitting
+one host-stepped and one device-resident driver row per cell with
+end-to-end ``run_ms``; its ``--json`` output is the file checked in as
+``BENCH_graph.json``, and the regression guard pins each resident row's
+``run_speedup_vs_host``.
 
 ``--tuned`` adds ``mode="auto"`` / ``backend="auto"`` rows: per-dataset
 variant selection through :mod:`repro.tune`, recording the chosen config
@@ -70,13 +73,26 @@ def run_graph_mode(args) -> None:
                             tuned=args.tuned,
                             tune_cache_dir=args.tune_cache)
     for r in rows:
-        print(f"graph_{r['dataset']}_{r['app']}_{r['backend']},"
-              f"{r['us_per_sweep']:.1f},"
-              f"sweeps={r['sweeps_run']};converged={r['converged']};"
-              f"build={r['plan_build_s']}s;plan_builds={r['plan_builds']}"
-              f"{_chosen_str(r)}")
+        name = (f"graph_{r['dataset']}_{r['app']}_{r['backend']}"
+                f"_{r['driver']}")
+        # the us_per_call column stays per-sweep only (host rows); resident
+        # rows report their whole-run cost in the run= field — mixing the
+        # two magnitudes in one column would invite bogus comparisons
+        main = r.get("us_per_sweep", 0.0)
+        bits = [f"run={r['run_ms']}ms"]
+        if "sweeps_run" in r:
+            bits.append(f"sweeps={r['sweeps_run']}")
+            bits.append(f"converged={r['converged']}")
+        if "iters" in r:
+            bits.append(f"iters={r['iters']}")
+        if "run_speedup_vs_host" in r:
+            bits.append(f"vs_host={r['run_speedup_vs_host']:.2f}x")
+        bits.append(f"build={r['plan_build_s']}s")
+        if "plan_builds" in r:
+            bits.append(f"plan_builds={r['plan_builds']}")
+        print(f"{name},{main:.1f},{';'.join(bits)}{_chosen_str(r)}")
     if args.json:
-        _write_json(args.json, "bench_graph.v1", args.scale, rows)
+        _write_json(args.json, "bench_graph.v2", args.scale, rows)
 
 
 def main() -> None:

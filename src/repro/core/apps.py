@@ -2,10 +2,16 @@
 
 * :class:`SpMV` — COO sparse matrix-vector product (paper Alg. 5).  The plan
   is built once per matrix (access arrays immutable); ``matvec`` is a jitted
-  call over the mutable ``x``.
+  call over the mutable ``x`` with a cached per-dtype zero ``y_init`` (no
+  per-call allocation litter).
 * :class:`PageRank` — edge-push power iteration (paper Alg. 4); one plan for
   the whole run, reused every sweep, exactly the amortization the paper's
-  runtime JIT relies on.
+  runtime JIT relies on.  ``run()`` is device-resident by default
+  (DESIGN.md §7): the contribution sweep, the dangling-mass reduction, and
+  the damping fold all live inside ONE jitted ``lax.fori_loop`` with a
+  donated rank buffer — one dispatch per run instead of 3+ dispatches per
+  iteration; ``driver="host"`` keeps the stepwise A/B baseline (bitwise
+  identical ranks).
 * :class:`BFS` / :class:`SSSP` / :class:`ConnectedComponents` — the graph
   applications (non-add semirings), re-exported from
   :mod:`repro.core.graphs`.
@@ -14,10 +20,12 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core.graphs import check_auto_kwargs
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import pagerank_seed, spmv_seed
 
@@ -39,6 +47,9 @@ class SpMV:
     _run: object
     dtype: np.dtype
     tuning: object | None = None   # TuningResult when built via backend="auto"
+    # cached zero y_init per dtype: repeated matvecs share one device
+    # constant instead of allocating a fresh jnp.zeros per call
+    _y0: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -58,6 +69,8 @@ class SpMV:
         access = {"row": rows, "col": cols}
         vals = np.asarray(vals)
         if backend == "auto" or tune:
+            check_auto_kwargs("SpMV.from_coo", backend=backend, fused=fused,
+                              stage_b=stage_b, cost=cost)
             from repro.tune import autotune
             dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
                 else np.float32
@@ -86,7 +99,11 @@ class SpMV:
     def matvec(self, x: jnp.ndarray, y_init: jnp.ndarray | None = None
                ) -> jnp.ndarray:
         if y_init is None:
-            y_init = jnp.zeros(self.shape[0], dtype=x.dtype)
+            key = np.dtype(x.dtype).str
+            y_init = self._y0.get(key)
+            if y_init is None:
+                y_init = self._y0[key] = jnp.zeros(self.shape[0],
+                                                   dtype=x.dtype)
         return self._run({"x": x}, y_init)
 
 
@@ -99,6 +116,10 @@ class PageRank:
     damping: float
     _run: object
     tuning: object | None = None   # TuningResult when built via backend="auto"
+    driver: str = "resident"
+    # cached per-dtype zero out_init + compiled driver programs
+    _zero: dict = dataclasses.field(default_factory=dict, repr=False)
+    _progs: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
     def from_edges(cls, src: np.ndarray, dst: np.ndarray, num_nodes: int,
@@ -108,7 +129,8 @@ class PageRank:
                    fused: bool = True,
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
-                   tune_cache_dir: str | None = None) -> "PageRank":
+                   tune_cache_dir: str | None = None,
+                   driver: str = "resident") -> "PageRank":
         seed = pagerank_seed()
         access = {"n2": dst, "n1": src}
         deg = np.bincount(src, minlength=num_nodes).astype(np.float64)
@@ -116,6 +138,8 @@ class PageRank:
         inv_j = jnp.asarray(inv, jnp.float32)
         tuning = None
         if backend == "auto" or tune:
+            check_auto_kwargs("PageRank.from_edges", backend=backend,
+                              fused=fused, cost=cost)
             from repro.tune import autotune
             rank_ex = jnp.full((num_nodes,), 1.0 / max(num_nodes, 1),
                                jnp.float32)
@@ -134,21 +158,77 @@ class PageRank:
         return cls(plan=plan, num_nodes=num_nodes,
                    inv_deg=inv_j,
                    dangling=jnp.asarray(deg == 0),
-                   damping=damping, _run=run, tuning=tuning)
+                   damping=damping, _run=run, tuning=tuning, driver=driver)
 
-    def sweep(self, rank: jnp.ndarray) -> jnp.ndarray:
-        """One contribution pass: sum[n2] += rank[n1] * inv_deg[n1]."""
-        zero = jnp.zeros(self.num_nodes, dtype=rank.dtype)
-        return self._run({"rank": rank, "inv_nneighbor": self.inv_deg}, zero)
+    def _zero_init(self, dtype) -> jnp.ndarray:
+        key = np.dtype(dtype).str
+        z = self._zero.get(key)
+        if z is None:
+            z = self._zero[key] = jnp.zeros(self.num_nodes, dtype)
+        return z
 
-    def run(self, iters: int = 20) -> jnp.ndarray:
+    def sweep(self, rank: jnp.ndarray,
+              out_init: jnp.ndarray | None = None) -> jnp.ndarray:
+        """One contribution pass: sum[n2] += rank[n1] * inv_deg[n1],
+        folded into ``out_init`` (default: the cached zero vector)."""
+        if out_init is None:
+            out_init = self._zero_init(rank.dtype)
+        return self._run({"rank": rank, "inv_nneighbor": self.inv_deg},
+                         out_init)
+
+    def _step(self):
+        """One full power iteration ``rank -> rank`` as a traceable body:
+        contribution sweep + dangling-mass reduction + damping fold.  Both
+        drivers run exactly this function (the host driver jits it
+        standalone, the resident driver embeds it in a ``fori_loop``), and
+        the dangling mass uses the pinned-order :func:`engine.tree_sum`,
+        so host and resident ranks are bitwise identical."""
+        body = getattr(self._run, "sweep_body", None) or self._run
+        n = self.num_nodes
+        damping = self.damping
+        inv = self.inv_deg
+        dangling = self.dangling
+        zero = self._zero_init(jnp.float32)
+
+        def step(rank):
+            contrib = body({"rank": rank, "inv_nneighbor": inv}, zero)
+            dangling_mass = eng.tree_sum(jnp.where(dangling, rank, 0.0))
+            return ((1.0 - damping) / n
+                    + damping * (contrib + dangling_mass / n))
+        return step
+
+    def run(self, iters: int = 20, driver: str | None = None) -> jnp.ndarray:
+        """``iters`` power iterations from the uniform distribution.
+
+        ``driver="resident"`` (default) is ONE jitted ``lax.fori_loop``
+        dispatch for the whole run — the freshly created rank buffer is
+        donated into the loop, which double-buffers the carry in place.
+        ``driver="host"`` dispatches one jitted iteration per step (the
+        A/B baseline); both return bitwise-identical ranks."""
+        driver = driver or self.driver
         n = self.num_nodes
         rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+        if driver == "resident":
+            prog = self._progs.get("resident")
+            if prog is None:
+                step = self._step()
+
+                def whole_run(rank0, num_iters):
+                    return jax.lax.fori_loop(0, num_iters,
+                                             lambda _i, r: step(r), rank0)
+                prog = jax.jit(whole_run, donate_argnums=(0,))
+                self._progs["resident"] = prog
+            # `rank` was created just above and never escapes: donating it
+            # is safe, the loop carry reuses its buffer
+            return prog(rank, jnp.asarray(iters, jnp.int32))
+        if driver != "host":
+            raise ValueError(f"unknown driver {driver!r}; "
+                             "expected 'resident' or 'host'")
+        step = self._progs.get("host")
+        if step is None:
+            step = self._progs["host"] = jax.jit(self._step())
         for _ in range(iters):
-            contrib = self.sweep(rank)
-            dangling_mass = jnp.sum(jnp.where(self.dangling, rank, 0.0))
-            rank = ((1.0 - self.damping) / n
-                    + self.damping * (contrib + dangling_mass / n))
+            rank = step(rank)
         return rank
 
 

@@ -29,6 +29,16 @@ reorder into class-sorted, in-block-sorted order) and returns a jitted
 callable over the *mutable* inputs only — mirroring the paper's split of
 immutable access arrays (analyzed, reordered) vs mutable data (touched every
 call).
+
+Device-resident iteration (DESIGN.md §7): :func:`make_sweeper` returns the
+same sweep *body* un-jitted, safe to embed inside ``lax.while_loop`` /
+``fori_loop`` fixpoint drivers — every host constant is staged to the
+device once at build time, so re-tracing the body inside a loop uploads
+nothing.  :func:`make_executor` jits exactly that body (the jitted
+``run`` exposes it as ``run.sweep_body``), so a resident loop iteration
+is byte-for-byte the program a standalone call runs; ``donate=True``
+additionally jit-donates ``out_init`` so back-to-back fixpoint sweeps
+double-buffer in place instead of allocating a fresh output per call.
 """
 from __future__ import annotations
 
@@ -99,14 +109,7 @@ def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
         # instead of the ladder's N log N, and for power-of-two widths its
         # root is bit-identical to the masked ladder's head lane.  The
         # Pallas kernel keeps the true native reduction.
-        total = term
-        while total.shape[1] > 1:
-            w = total.shape[1]
-            if w % 2:
-                total = jnp.pad(total, ((0, 0), (0, 1)),
-                                constant_values=identity)
-                w += 1
-            total = op(total[:, 0::2], total[:, 1::2])
+        total = _halving_tree(term, op, identity)
         return term.at[:, 0].set(total[:, 0])
     for k in range(op_flag):
         d = 1 << k
@@ -116,6 +119,31 @@ def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
                             constant_values=_SEG_PAD)
         term = jnp.where(seg == seg_shift, op(term, shifted), term)
     return term
+
+
+def _halving_tree(total: jnp.ndarray, op, identity) -> jnp.ndarray:
+    """(B, N) -> (B, 1) full reduction by pairwise halving along axis 1 —
+    a FIXED combine order in every surrounding program (elementwise ops
+    cannot be reassociated by XLA), which is what every bitwise guarantee
+    in this engine leans on; see the FULL_REDUCE note in
+    :func:`segmented_reduce`."""
+    while total.shape[1] > 1:
+        if total.shape[1] % 2:
+            total = jnp.pad(total, ((0, 0), (0, 1)),
+                            constant_values=identity)
+        total = op(total[:, 0::2], total[:, 1::2])
+    return total
+
+
+def tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic full sum of a 1-D array by pairwise halving — the same
+    fixed combine order in every surrounding program (a native ``jnp.sum``
+    does not pin its accumulation order across programs, which would break
+    host-vs-resident bitwise parity for PageRank's dangling-mass
+    reduction)."""
+    if x.size == 0:
+        return jnp.zeros((), x.dtype)
+    return _halving_tree(x.reshape(1, -1), jnp.add, 0)[0, 0]
 
 
 def _gather_class_values(plan: BlockPlan, c: PatternClass, s: slice,
@@ -362,28 +390,21 @@ def reorder_static(plan: BlockPlan, static_data: Mapping[str, np.ndarray]
             for e in seed.elementwise}
 
 
-def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
-                  backend: str = "jax", interpret: bool | None = None,
-                  fused: bool = True, stage_b: str = "auto",
-                  fuse_classes: bool | None = None,
-                  elem_exec: Mapping[str, jnp.ndarray] | None = None):
-    """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
+def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
+                 backend: str = "jax", interpret: bool | None = None,
+                 fused: bool = True, stage_b: str = "auto",
+                 elem_exec: Mapping[str, jnp.ndarray] | None = None):
+    """The raw sweep body ``fn(mutable: dict, out_init) -> out`` — the same
+    stage-A/stage-B program :func:`make_executor` jits, without the jit
+    boundary, for embedding inside ``lax.while_loop`` / ``fori_loop``
+    fixpoint drivers (DESIGN.md §7).
 
-    ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
-    arrays in original order; they are reordered once here (Data Transfer)
-    and closed over as device constants.  ``elem_exec`` optionally supplies
-    the already-reordered arrays (:func:`reorder_static`) so multiple
-    executors on one plan share the reorder work.
-
-    ``fused`` (default) collapses the per-class launch list into at most
-    two launches (DESIGN.md §3); ``fused=False`` keeps the paper's
-    one-launch-per-pattern-class form.  ``stage_b`` selects the write-back:
-    ``"gather"`` (head re-gather from the flat lane stream), ``"dense"``
-    (scatter the full lane stream through the precomputed dense head-row
-    buffer), or ``"auto"`` (dense when heads dominate the lane stream).
-    """
-    if fuse_classes is not None:      # legacy alias of the pre-fused API
-        fused = fuse_classes
+    All host-side constants (reordered elementwise arrays, lane metadata,
+    write-back structure) are staged to the device HERE, once: tracing the
+    returned function inside a resident loop closes over device arrays and
+    re-uploads nothing.  Because the standalone executor is literally
+    ``jax.jit`` of this function, a resident loop iteration is bitwise
+    identical to a standalone executor call."""
     seed = plan.seed
     if elem_exec is None:
         elem_exec = reorder_static(plan, static_data)
@@ -412,7 +433,6 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     if backend == "jax":
         classes = fused_xla_classes(plan) if fused else plan.classes
 
-        @jax.jit
         def run(mutable, out_init):
             lanes = _stage_a_jax(plan, meta, elem_exec, mutable, classes)
             return write_back(plan, meta, lanes, out_init)
@@ -450,7 +470,6 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         from repro.core.seed import REDUCE_OPS
         fold = REDUCE_OPS[seed.reduce][0]
 
-        @jax.jit
         def run_ss(mutable, out_init):
             vals = {}
             for g in seed.gathered:
@@ -469,13 +488,58 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         stage_a = kops.make_stage_a(plan, meta, elem_exec,
                                     interpret=interpret, fused=fused)
 
-        @jax.jit
         def run_pl(mutable, out_init):
             lanes = stage_a(mutable)
             return write_back(plan, meta, lanes, out_init)
         return run_pl
 
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
+                  backend: str = "jax", interpret: bool | None = None,
+                  fused: bool = True, stage_b: str = "auto",
+                  fuse_classes: bool | None = None,
+                  elem_exec: Mapping[str, jnp.ndarray] | None = None,
+                  donate: bool = False):
+    """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
+
+    ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
+    arrays in original order; they are reordered once here (Data Transfer)
+    and closed over as device constants.  ``elem_exec`` optionally supplies
+    the already-reordered arrays (:func:`reorder_static`) so multiple
+    executors on one plan share the reorder work.
+
+    ``fused`` (default) collapses the per-class launch list into at most
+    two launches (DESIGN.md §3); ``fused=False`` keeps the paper's
+    one-launch-per-pattern-class form.  ``stage_b`` selects the write-back:
+    ``"gather"`` (head re-gather from the flat lane stream), ``"dense"``
+    (scatter the full lane stream through the precomputed dense head-row
+    buffer), or ``"auto"`` (dense when heads dominate the lane stream).
+
+    ``donate=True`` jit-donates ``out_init``: a fixpoint driver that
+    ping-pongs two buffers then reuses storage in place instead of
+    allocating ``out_len`` per call.  Donation safety (DESIGN.md §7): the
+    donated ``out_init`` must be a DIFFERENT buffer from every gathered
+    mutable input — XLA rejects the self-alias ``run(state, donate(state))``
+    with an explicit error rather than corrupting — and the caller's
+    ``out_init`` array is consumed, so retaining and reusing the reference
+    raises instead of silently reading clobbered memory.  For the aliased
+    self-fold sweep (``out_init`` IS the state), use the resident loop
+    drivers instead: the ``while_loop`` carry double-buffers internally
+    with no donation hazard.
+
+    The returned callable exposes the raw traceable body as
+    ``run.sweep_body`` (see :func:`make_sweeper`).
+    """
+    if fuse_classes is not None:      # legacy alias of the pre-fused API
+        fused = fuse_classes
+    body = make_sweeper(plan, static_data, backend=backend,
+                        interpret=interpret, fused=fused, stage_b=stage_b,
+                        elem_exec=elem_exec)
+    run = jax.jit(body, donate_argnums=(1,) if donate else ())
+    run.sweep_body = body
+    return run
 
 
 def make_baseline_gather(seed: CodeSeed, access: Mapping[str, np.ndarray],

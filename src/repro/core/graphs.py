@@ -24,6 +24,15 @@ incoming edge keep their value and a fixpoint is exact array equality —
 the convergence check needs no tolerance, including for float SSSP
 (Bellman-Ford reaches its fixpoint in at most ``num_nodes`` synchronous
 sweeps; each value is a finite min over path sums).
+
+The convergence driver itself is device-resident by default
+(``driver="resident"``, DESIGN.md §7): the whole relaxation loop is ONE
+jitted ``lax.while_loop`` whose body is the same sweep program a
+standalone call runs and whose convergence check is a device-side
+``jnp.array_equal`` — one host sync per ``run()`` instead of one per
+sweep.  ``driver="host"`` keeps the sweep-at-a-time Python loop (the A/B
+baseline the benchmarks report against); both drivers produce bitwise
+identical states, sweep counts, and convergence flags.
 """
 from __future__ import annotations
 
@@ -64,21 +73,51 @@ def _build(seed: CodeSeed, access, out_len, data_len, cost,
                                     cost=cost, cache_dir=plan_cache_dir)
 
 
+# sweeps per timed whole-run tuning candidate: enough iterations that the
+# per-call dispatch/sync a resident loop amortizes away is visible in the
+# ranking, small enough that tuning stays cheap (the count is part of the
+# tuning-cache key so a changed discipline re-tunes).
+_TUNE_RUN_SWEEPS = 8
+
+
 def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
                     state_key: str, state_example, plan_cache_dir,
-                    tune_cache_dir, lane_width: int = 128):
-    """Input-adaptive variant selection for a graph app: the tuner times
-    one relaxation sweep per candidate on a representative state vector
-    and returns the winning executor.  The convergence driver then reuses
-    that one executor for every sweep — the amortization story is
-    unchanged, only the variant choice became per-input."""
+                    tune_cache_dir, lane_width: int = 128,
+                    driver: str = "resident"):
+    """Input-adaptive variant selection for a graph app.  The convergence
+    driver reuses the winning executor for every sweep — the amortization
+    story is unchanged, only the variant choice became per-input.
+
+    What gets TIMED follows the driver (DESIGN.md §7): under the resident
+    driver each candidate is measured as a fixed-length on-device
+    ``fori_loop`` over its sweep body — the variant that wins a
+    standalone-sweep race is not always the variant that wins once
+    per-sweep dispatch and sync vanish, so per-sweep timings would pick
+    the wrong winner for the driver that actually runs.  The host driver
+    keeps the one-sweep measurement.  Correctness screening is unchanged
+    either way: every candidate's single-sweep output is checked against
+    the scatter oracle before its timing can compete."""
     from repro.tune import autotune
     global _plan_builds
+    measure_wrap = None
+    cache_extra = ""
+    if driver == "resident":
+        def measure_wrap(run):
+            body = getattr(run, "sweep_body", None) or run
+
+            def whole_run(mutable, _out_init):
+                return jax.lax.fori_loop(
+                    0, _TUNE_RUN_SWEEPS,
+                    lambda _i, s: body({state_key: s}, s),
+                    mutable[state_key])
+            return jax.jit(whole_run)
+        cache_extra = f"measure=resident_run:{_TUNE_RUN_SWEEPS}"
     plan, run, result = autotune(
         seed, access, num_nodes, num_nodes, static_data,
         {state_key: state_example}, state_example,
         lane_widths=(lane_width,),
-        plan_cache_dir=plan_cache_dir, tune_cache_dir=tune_cache_dir)
+        plan_cache_dir=plan_cache_dir, tune_cache_dir=tune_cache_dir,
+        measure_wrap=measure_wrap, cache_extra=cache_extra)
     _plan_builds += result.plans_built
     return plan, run, result
 
@@ -112,8 +151,16 @@ def cc_seed() -> CodeSeed:
 
 @dataclasses.dataclass
 class _FixpointApp:
-    """Shared convergence driver: one plan, one jitted sweep, iterate the
-    sweep until exact fixpoint (or ``max_sweeps``)."""
+    """Shared convergence driver: one plan, one sweep program, iterate the
+    sweep until exact fixpoint (or ``max_sweeps``).
+
+    ``driver="resident"`` (default) runs the loop on device: one jitted
+    ``lax.while_loop`` whose carry is ``(state, sweep_count, changed)``
+    (the previous state is consumed by the in-body equality check, so the
+    carry never hauls it), one host sync per convergence.
+    ``driver="host"`` steps one jitted sweep per Python iteration with a
+    blocking equality check after each — same states, same counts,
+    bitwise identical."""
 
     plan: BlockPlan
     num_nodes: int
@@ -122,23 +169,85 @@ class _FixpointApp:
     sweeps_run: int = 0
     converged: bool = False
     tuning: object | None = None   # TuningResult when built via backend="auto"
+    driver: str = "resident"
+    # jitted resident converge programs, keyed by single/batched step
+    _resident: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def sweep(self, state: jnp.ndarray) -> jnp.ndarray:
         """One relaxation pass folded into the previous state."""
         return self._run({self._state_key: state}, state)
 
+    def _step_body(self):
+        """The raw traceable sweep ``state -> state`` — the executor's own
+        body when available (``make_executor`` attaches it), else the
+        jitted executor itself (jit-of-jit inlines under the loop trace)."""
+        body = getattr(self._run, "sweep_body", None) or self._run
+        key = self._state_key
+        return lambda s: body({key: s}, s)
+
+    def _resident_converge(self, batched: bool):
+        """The jitted whole-convergence program (built once per driver
+        shape; jit re-specializes per state shape/dtype as usual).
+
+        The loop body is byte-for-byte the standalone sweep program; the
+        exact-equality convergence check (module docstring: fixpoints are
+        exact, no tolerance needed) moves into the loop as a device-side
+        ``jnp.array_equal`` over the full state — for batched multi-source
+        runs that is equality over the whole (S, N) batch, preserving the
+        all-sources-converged semantics of the host driver."""
+        fn = self._resident.get(batched)
+        if fn is None:
+            step = self._step_body()
+            if batched:
+                step = jax.vmap(step)
+
+            def converge(state, max_sweeps):
+                def cond(carry):
+                    _state, count, changed = carry
+                    return jnp.logical_and(changed, count < max_sweeps)
+
+                def body(carry):
+                    state, count, _changed = carry
+                    new = step(state)
+                    return (new, count + jnp.int32(1),
+                            jnp.logical_not(jnp.array_equal(new, state)))
+
+                init = (state, jnp.int32(0), jnp.bool_(True))
+                final, count, changed = jax.lax.while_loop(cond, body, init)
+                return final, count, jnp.logical_not(changed)
+
+            fn = jax.jit(converge)
+            self._resident[batched] = fn
+        return fn
+
     def _converge(self, state: jnp.ndarray, max_sweeps: int | None,
-                  step=None) -> jnp.ndarray:
-        """Iterate ``step`` (default: one sweep) to exact fixpoint.
-        ``sweeps_run``/``converged`` record how the run ended — a run that
-        exhausts ``max_sweeps`` without reaching a fixpoint reports
-        ``converged=False``."""
-        if step is None:
-            step = self.sweep
+                  step=None, driver: str | None = None,
+                  batched: bool = False) -> jnp.ndarray:
+        """Iterate the sweep to exact fixpoint.  ``sweeps_run`` /
+        ``converged`` record how the run ended — a run that exhausts
+        ``max_sweeps`` without reaching a fixpoint reports
+        ``converged=False``.  An explicit ``step`` override always runs on
+        the host driver (it is an arbitrary callable)."""
         if max_sweeps is None:
             max_sweeps = self.num_nodes + 1
+        driver = driver or self.driver
+        if step is not None:
+            driver = "host"
         self.sweeps_run = 0
         self.converged = False
+        if driver == "resident":
+            fn = self._resident_converge(batched)
+            final, count, converged = fn(state,
+                                         jnp.asarray(max_sweeps, jnp.int32))
+            # the ONE host sync of the whole run
+            self.sweeps_run = int(count)
+            self.converged = bool(converged)
+            return final
+        if driver != "host":
+            raise ValueError(f"unknown driver {driver!r}; "
+                             "expected 'resident' or 'host'")
+        if step is None:
+            step = jax.vmap(self.sweep) if batched else self.sweep
         for _ in range(max_sweeps):
             new = step(state)
             self.sweeps_run += 1
@@ -154,6 +263,38 @@ def _executor_kwargs(backend, fused, stage_b, interpret):
     if backend == "pallas":
         kw["interpret"] = interpret
     return kw
+
+
+def check_auto_kwargs(name: str, *, backend: str = "auto",
+                      fused: bool = True, stage_b: str = "auto",
+                      cost=None, interpret: bool | None = None) -> None:
+    """``backend="auto"`` / ``tune=True`` hand variant selection to the
+    tuner — an explicit ``fused`` / ``stage_b`` / ``cost`` / ``interpret``
+    (or a non-default backend next to ``tune=True``) alongside it used to
+    be dropped without a word.  Raise instead: the caller either wants
+    the tuner (drop the variant kwargs) or a specific variant (name the
+    backend explicitly, without ``tune``)."""
+    conflicts = []
+    # "jax" is the signature default, so it cannot signal an explicit
+    # request; any OTHER backend next to tune=True clearly does — and the
+    # tuner would drop it for the full measured space
+    if backend not in ("auto", "jax"):
+        conflicts.append(f"backend={backend!r}")
+    if fused is not True:
+        conflicts.append("fused")
+    if stage_b != "auto":
+        conflicts.append("stage_b")
+    if cost is not None:
+        conflicts.append("cost")
+    if interpret is not None:
+        conflicts.append("interpret")
+    if conflicts:
+        raise ValueError(
+            f"{name}: backend='auto'/tune=True selects the execution "
+            f"variant by measurement, but explicit {', '.join(conflicts)} "
+            "was also given and would be silently ignored — drop it, or "
+            "pick an explicit backend (without tune=True) to pin the "
+            "variant")
 
 
 @dataclasses.dataclass
@@ -172,24 +313,28 @@ class BFS(_FixpointApp):
                    stage_b: str = "auto", interpret: bool | None = None,
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
-                   tune_cache_dir: str | None = None) -> "BFS":
+                   tune_cache_dir: str | None = None,
+                   driver: str = "resident") -> "BFS":
         seed = bfs_seed()
         access = {"dst": np.asarray(dst), "src": np.asarray(src)}
         if backend == "auto" or tune:
+            check_auto_kwargs("BFS.from_edges", backend=backend, fused=fused,
+                              stage_b=stage_b, cost=cost,
+                              interpret=interpret)
             lv = np.full(num_nodes, UNREACHED, np.int32)
             lv[0] = 0
             plan, run, tuning = _autotune_build(
                 seed, access, num_nodes, {}, "level", jnp.asarray(lv),
-                plan_cache_dir, tune_cache_dir, lane_width)
+                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
             return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="level", tuning=tuning)
+                       _state_key="level", tuning=tuning, driver=driver)
         cost = cost or CostModel(lane_width=lane_width)
         plan = _build(seed, access, num_nodes, num_nodes, cost,
                       plan_cache_dir)
         run = eng.make_executor(plan, {}, **_executor_kwargs(
             backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="level")
+                   _state_key="level", driver=driver)
 
     def _init_levels(self, sources: np.ndarray) -> jnp.ndarray:
         lv = np.full((sources.shape[0], self.num_nodes), UNREACHED, np.int32)
@@ -206,11 +351,14 @@ class BFS(_FixpointApp):
     def run_multi(self, sources, max_sweeps: int | None = None) -> np.ndarray:
         """Batched multi-source BFS: one ``vmap``-ed sweep over all sources
         simultaneously — S plans' worth of work from ONE plan and one jitted
-        program (XLA backend).  Returns (S, num_nodes) levels, -1 where
+        program (XLA backend).  Under the resident driver the vmapped sweep
+        is the ``while_loop`` body and convergence is equality over the full
+        (S, num_nodes) batch — all sources converge together, exactly the
+        host driver's semantics.  Returns (S, num_nodes) levels, -1 where
         unreachable."""
         sources = np.asarray(sources)
         state = self._converge(self._init_levels(sources), max_sweeps,
-                               step=jax.vmap(self.sweep))
+                               batched=True)
         lv = np.asarray(state)
         return np.where(lv >= UNREACHED, -1, lv).astype(np.int32)
 
@@ -233,18 +381,22 @@ class SSSP(_FixpointApp):
                    stage_b: str = "auto", interpret: bool | None = None,
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
-                   tune_cache_dir: str | None = None) -> "SSSP":
+                   tune_cache_dir: str | None = None,
+                   driver: str = "resident") -> "SSSP":
         seed = sssp_seed()
         access = {"dst": np.asarray(dst), "src": np.asarray(src)}
         static = {"weight": np.asarray(weight, np.float32)}
         if backend == "auto" or tune:
+            check_auto_kwargs("SSSP.from_edges", backend=backend, fused=fused,
+                              stage_b=stage_b, cost=cost,
+                              interpret=interpret)
             d0 = np.full(num_nodes, np.inf, np.float32)
             d0[0] = 0.0
             plan, run, tuning = _autotune_build(
                 seed, access, num_nodes, static, "dist", jnp.asarray(d0),
-                plan_cache_dir, tune_cache_dir, lane_width)
+                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
             return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="dist", tuning=tuning)
+                       _state_key="dist", tuning=tuning, driver=driver)
         cost = cost or CostModel(lane_width=lane_width)
         plan = _build(seed, access, num_nodes, num_nodes, cost,
                       plan_cache_dir)
@@ -252,7 +404,7 @@ class SSSP(_FixpointApp):
             plan, static,
             **_executor_kwargs(backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="dist")
+                   _state_key="dist", driver=driver)
 
     def run(self, source: int, max_sweeps: int | None = None) -> np.ndarray:
         dist = np.full(self.num_nodes, np.inf, np.float32)
@@ -277,26 +429,30 @@ class ConnectedComponents(_FixpointApp):
                    stage_b: str = "auto", interpret: bool | None = None,
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
-                   tune_cache_dir: str | None = None
+                   tune_cache_dir: str | None = None,
+                   driver: str = "resident"
                    ) -> "ConnectedComponents":
         seed = cc_seed()
         s = np.concatenate([np.asarray(src), np.asarray(dst)])
         d = np.concatenate([np.asarray(dst), np.asarray(src)])
         access = {"dst": d, "src": s}
         if backend == "auto" or tune:
+            check_auto_kwargs("ConnectedComponents.from_edges", backend=backend, fused=fused,
+                              stage_b=stage_b, cost=cost,
+                              interpret=interpret)
             labels = jnp.arange(num_nodes, dtype=jnp.int32)
             plan, run, tuning = _autotune_build(
                 seed, access, num_nodes, {}, "label", labels,
-                plan_cache_dir, tune_cache_dir, lane_width)
+                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
             return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="label", tuning=tuning)
+                       _state_key="label", tuning=tuning, driver=driver)
         cost = cost or CostModel(lane_width=lane_width)
         plan = _build(seed, access, num_nodes, num_nodes, cost,
                       plan_cache_dir)
         run = eng.make_executor(plan, {}, **_executor_kwargs(
             backend, fused, stage_b, interpret))
         return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="label")
+                   _state_key="label", driver=driver)
 
     def run(self, max_sweeps: int | None = None) -> np.ndarray:
         """Component labels: ``label[v]`` = min node id in v's component."""

@@ -90,6 +90,9 @@ class SpMM:
         access = {"row": rows, "col": cols}
         vals = np.asarray(vals)
         if backend == "auto" or tune:
+            from repro.core.graphs import check_auto_kwargs
+            check_auto_kwargs("SpMM.from_coo", backend=backend,
+                              fused=fused, cost=cost)
             from repro.tune import Candidate, autotune
             space = [Candidate(backend="jax", fused=f, lane_width=lane_width)
                      for f in (True, False)]

@@ -167,7 +167,8 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
              tune_cache_dir: str | None = None,
              plan_cache_dir: str | None = None,
              allow_interpret: bool = False, force: bool = False,
-             exec_factory=None, oracle="reference"):
+             exec_factory=None, oracle="reference",
+             measure_wrap=None, cache_extra: str = ""):
     """Pick the best execution variant for this input; return
     ``(plan, run, TuningResult)`` where ``run(mutable, out_init)`` is the
     tuned jitted executor.
@@ -178,6 +179,15 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     pass an explicit array for custom executors, or ``None`` to skip the
     check.  ``force=True`` ignores (but still refreshes) the tuning
     cache.
+
+    ``measure_wrap(run) -> timed_callable`` changes what gets TIMED
+    without changing what gets RETURNED or oracle-checked: the fixpoint
+    apps pass a wrapper that embeds each candidate's sweep body in a
+    device-resident loop, so the measurement matches how the winning
+    executor will actually be driven (DESIGN.md §7).  ``cache_extra``
+    must then name the measurement discipline — it is folded into the
+    tuning-cache key so a per-sweep choice is never replayed as a
+    per-run choice (or vice versa).
     """
     platform = platform or tspace.default_platform()
     if space is None:
@@ -193,7 +203,7 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     key = None
     if tune_cache_dir is not None:
         key = tcache.tuning_key(seed.name, seed.reduce, access, out_len,
-                                data_len, platform, sig)
+                                data_len, platform, sig, extra=cache_extra)
         if not force:
             entry = tcache.load_entry(tune_cache_dir, key)
             if entry is not None:
@@ -239,8 +249,9 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
                     "oracle output; rejected", RuntimeWarning)
         built.append((cand, predicted, ok, run))
         runs[cand] = run
-    times = _measure_all([b[3] for b in built], mutable_example, out_init,
-                         warmup, iters)
+    timed = [b[3] if measure_wrap is None else measure_wrap(b[3])
+             for b in built]
+    times = _measure_all(timed, mutable_example, out_init, warmup, iters)
     measurements = [Measurement(candidate=cand, us_per_call=us,
                                 predicted_us=predicted, ok=ok)
                     for (cand, predicted, ok, _), us in zip(built, times)]

@@ -1,0 +1,344 @@
+"""Device-resident iteration tests (DESIGN.md §7).
+
+The resident ``lax.while_loop`` / ``fori_loop`` drivers must be a pure
+execution-strategy change: bitwise-identical final states, identical
+``sweeps_run`` / ``converged`` reporting, identical truncation behaviour,
+and the same one-plan-per-graph amortization — across every app, backend,
+and launch-list mode.  Donation must never corrupt results, even when the
+caller retains a reference to the donated buffer.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import graphs as GR
+from repro.core.apps import PageRank, SpMV, pagerank_reference
+from repro.core.plan import CostModel, build_plan
+from repro.sparse import generators as G
+
+# (backend, fused): the jax backend has distinct fused/per-class launch
+# lists; segsum has a single canonical form (space.canonicalize)
+VARIANTS = [("jax", True), ("jax", False), ("segsum", True)]
+
+
+def _build_app(app, case, backend, fused, driver="resident"):
+    kw = dict(lane_width=16, backend=backend, fused=fused, driver=driver)
+    if app == "bfs":
+        return GR.BFS.from_edges(case.src, case.dst, case.num_nodes, **kw)
+    if app == "sssp":
+        return GR.SSSP.from_edges(case.src, case.dst, case.weight,
+                                  case.num_nodes, **kw)
+    return GR.ConnectedComponents.from_edges(case.src, case.dst,
+                                             case.num_nodes, **kw)
+
+
+@pytest.mark.parametrize("backend,fused", VARIANTS)
+@pytest.mark.parametrize("app", ["bfs", "sssp", "cc"])
+def test_resident_bitwise_equals_host(app, backend, fused):
+    """One instance, both drivers: final states bitwise equal (exact for
+    int32 levels/labels AND float32 distances), and the sweeps_run /
+    converged reporting identical."""
+    c = G.graph_case("powerlaw", 192, 6)
+    inst = _build_app(app, c, backend, fused)
+    host = _run_app(inst, "host")
+    res = _run_app(inst, "resident")
+    np.testing.assert_array_equal(host[0], res[0])
+    assert host[1:] == res[1:]          # (sweeps_run, converged)
+
+
+def _run_app(inst, driver):
+    inst.driver = driver
+    out = inst.run() if isinstance(inst, GR.ConnectedComponents) \
+        else inst.run(0)
+    return np.asarray(out), inst.sweeps_run, inst.converged
+
+
+@pytest.mark.parametrize("kind", ["empty", "isolated", "ring"])
+def test_resident_degenerate_graphs(kind):
+    """Degenerate graph classes converge identically under both drivers."""
+    c = G.graph_case(kind, 64, 4)
+    inst = _build_app("bfs", c, "jax", True)
+    host = _run_app(inst, "host")
+    res = _run_app(inst, "resident")
+    np.testing.assert_array_equal(host[0], res[0])
+    assert host[1:] == res[1:]
+
+
+def test_resident_max_sweeps_truncation():
+    """A run that exhausts max_sweeps on device reports converged=False
+    with sweeps_run == max_sweeps — exactly like the host driver."""
+    r = G.graph_case("ring", 64)
+    inst = GR.BFS.from_edges(r.src, r.dst, r.num_nodes, lane_width=16)
+    lv_host = inst._converge(inst._init_levels(np.asarray([0]))[0], 5,
+                             driver="host")
+    host = (np.asarray(lv_host), inst.sweeps_run, inst.converged)
+    lv_res = inst._converge(inst._init_levels(np.asarray([0]))[0], 5,
+                            driver="resident")
+    assert inst.sweeps_run == 5 and not inst.converged
+    np.testing.assert_array_equal(np.asarray(lv_res), host[0])
+    assert (inst.sweeps_run, inst.converged) == host[1:]
+
+
+def test_resident_multi_source_bfs_vmap():
+    """The vmapped sweep under while_loop: all-sources-converged semantics
+    (equality over the full (S, N) batch), bitwise equal to the host
+    driver and to independent per-source runs."""
+    c = G.graph_case("powerlaw", 256, 6)
+    inst = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    sources = [0, 3, 17, 101]
+    inst.driver = "host"
+    host = inst.run_multi(sources)
+    h_rep = (inst.sweeps_run, inst.converged)
+    inst.driver = "resident"
+    res = inst.run_multi(sources)
+    np.testing.assert_array_equal(host, res)
+    assert (inst.sweeps_run, inst.converged) == h_rep
+    for i, s in enumerate(sources):
+        np.testing.assert_array_equal(
+            res[i], GR.bfs_reference(c.src, c.dst, c.num_nodes, s))
+
+
+def test_resident_driver_reuses_one_plan():
+    """The resident driver changes how sweeps are dispatched, not how many
+    plans exist: one build per graph across runs, re-runs, and multi-source
+    batches."""
+    c = G.graph_case("uniform", 200, 5)
+    before = GR.plan_build_count()
+    inst = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    inst.run(0)
+    inst.run(1)
+    inst.run_multi([0, 2, 4])
+    inst.run(0, max_sweeps=2)
+    assert GR.plan_build_count() == before + 1
+
+
+def test_unknown_driver_rejected():
+    c = G.graph_case("uniform", 64, 4)
+    inst = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16,
+                             driver="warp")
+    with pytest.raises(ValueError, match="driver"):
+        inst.run(0)
+
+
+# ------------------------------------------------------------ make_sweeper
+
+def test_make_sweeper_bitwise_equals_executor():
+    """The sweeper is the executor's own body: standalone call, jitted
+    call, and while_loop-embedded call all produce identical bits."""
+    c = G.graph_case("powerlaw", 160, 6)
+    seed = GR.bfs_seed()
+    access = {"dst": c.dst, "src": c.src}
+    plan = build_plan(seed, access, c.num_nodes, c.num_nodes,
+                      cost=CostModel(lane_width=16))
+    run = eng.make_executor(plan, {})
+    sweep = eng.make_sweeper(plan, {})
+    assert run.sweep_body is not None
+    lv = np.full(c.num_nodes, GR.UNREACHED, np.int32)
+    lv[0] = 0
+    s0 = jnp.asarray(lv)
+    want = np.asarray(run({"level": s0}, s0))
+    got_eager = np.asarray(sweep({"level": s0}, s0))
+    np.testing.assert_array_equal(got_eager, want)
+    # three executor dispatches == one fori_loop over the sweeper body
+    want3 = s0
+    for _ in range(3):
+        want3 = run({"level": want3}, want3)
+
+    @jax.jit
+    def loop3(s):
+        return jax.lax.fori_loop(0, 3, lambda _i, t: sweep({"level": t}, t),
+                                 s)
+    np.testing.assert_array_equal(np.asarray(loop3(s0)), np.asarray(want3))
+
+
+@pytest.mark.parametrize("backend", ["jax", "segsum"])
+def test_sweeper_matches_executor_all_backends(backend):
+    """make_sweeper covers every backend the executor does (same body)."""
+    c = G.graph_case("uniform", 128, 5)
+    seed = GR.sssp_seed()
+    access = {"dst": c.dst, "src": c.src}
+    static = {"weight": np.asarray(c.weight, np.float32)}
+    plan = build_plan(seed, access, c.num_nodes, c.num_nodes,
+                      cost=CostModel(lane_width=16))
+    run = eng.make_executor(plan, static, backend=backend)
+    sweep = eng.make_sweeper(plan, static, backend=backend)
+    d0 = np.full(c.num_nodes, np.inf, np.float32)
+    d0[0] = 0.0
+    s0 = jnp.asarray(d0)
+    np.testing.assert_array_equal(np.asarray(run({"dist": s0}, s0)),
+                                  np.asarray(sweep({"dist": s0}, s0)))
+
+
+# --------------------------------------------------------------- donation
+
+def test_donated_executor_no_aliasing_corruption():
+    """donate=True with a caller-retained out_init (distinct from the
+    gathered state — DESIGN.md §7 donation rule): the result must match
+    the non-donating executor bit for bit, and the retained reference
+    must either stay intact or raise JAX's deleted-buffer error — never
+    silently read clobbered memory."""
+    c = G.graph_case("uniform", 128, 5)
+    seed = GR.sssp_seed()
+    access = {"dst": c.dst, "src": c.src}
+    static = {"weight": np.asarray(c.weight, np.float32)}
+    plan = build_plan(seed, access, c.num_nodes, c.num_nodes,
+                      cost=CostModel(lane_width=16))
+    run = eng.make_executor(plan, static)
+    run_d = eng.make_executor(plan, static, donate=True)
+    d0 = np.full(c.num_nodes, np.inf, np.float32)
+    d0[0] = 0.0
+    want = np.asarray(run({"dist": jnp.asarray(d0)}, jnp.asarray(d0)))
+
+    state = jnp.asarray(d0)
+    keep = jnp.asarray(d0)              # distinct buffer, same contents
+    got = np.asarray(run_d({"dist": state}, keep))
+    np.testing.assert_array_equal(got, want)
+    try:
+        arr = np.asarray(keep)          # donated: deleted on most backends
+    except RuntimeError:
+        pass                            # explicit error — safe
+    else:
+        np.testing.assert_array_equal(arr, d0)   # or untouched — safe
+    # the non-donated gathered state is never consumed
+    np.testing.assert_array_equal(np.asarray(state), d0)
+
+
+def test_donated_executor_rejects_self_alias():
+    """The self-fold pattern ``run(state, donate(state))`` — one buffer as
+    both gathered input and donated out_init — is rejected with an
+    explicit error, never a silent wrong answer.  (In-place self-fold
+    iteration is exactly what the resident while_loop driver provides:
+    XLA double-buffers the loop carry internally, no donation hazard.)"""
+    c = G.graph_case("powerlaw", 128, 5)
+    seed = GR.bfs_seed()
+    access = {"dst": c.dst, "src": c.src}
+    plan = build_plan(seed, access, c.num_nodes, c.num_nodes,
+                      cost=CostModel(lane_width=16))
+    run_d = eng.make_executor(plan, {}, donate=True)
+    lv = np.full(c.num_nodes, GR.UNREACHED, np.int32)
+    lv[0] = 0
+    keep = jnp.asarray(lv)
+    with pytest.raises(Exception, match="[Dd]onat"):
+        jax.block_until_ready(run_d({"level": keep}, keep))
+
+
+def test_donated_fixpoint_double_buffer_sweeps():
+    """A donation-aware fixpoint loop ping-pongs two buffers (the donated
+    out_init is always distinct from the gathered state) and matches the
+    non-donating executor bit for bit at every sweep."""
+    c = G.graph_case("uniform", 128, 5)
+    seed = GR.cc_seed()
+    access = {"dst": c.dst, "src": c.src}
+    plan = build_plan(seed, access, c.num_nodes, c.num_nodes,
+                      cost=CostModel(lane_width=16))
+    run = eng.make_executor(plan, {})
+    run_d = eng.make_executor(plan, {}, donate=True)
+    want = jnp.arange(c.num_nodes, dtype=jnp.int32)
+    got = jnp.arange(c.num_nodes, dtype=jnp.int32)
+    for _ in range(4):
+        want = run({"label": want}, want)
+        # CC folds min(out_init, gathered-min): out_init sharing the
+        # state's CONTENTS (not its buffer) keeps the fold semantics
+        spare = got + 0                 # distinct buffer to donate
+        got = run_d({"label": got}, spare)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------- PageRank
+
+def test_pagerank_resident_bitwise_equals_host():
+    rng = np.random.default_rng(7)
+    n = 256
+    src = rng.integers(0, n, 1500)
+    dst = rng.integers(0, n, 1500)
+    pr = PageRank.from_edges(src, dst, n, lane_width=16)
+    res = np.asarray(pr.run(iters=15))
+    host = np.asarray(pr.run(iters=15, driver="host"))
+    np.testing.assert_array_equal(res, host)
+    ref = pagerank_reference(src, dst, n, iters=15)
+    np.testing.assert_allclose(res, ref, rtol=1e-4, atol=1e-6)
+
+
+def test_pagerank_resident_one_compiled_program():
+    """The whole run is one dispatchable program: iters is a traced
+    argument, so changing it re-dispatches without re-compiling, and the
+    resident program is built exactly once per instance."""
+    rng = np.random.default_rng(9)
+    n = 128
+    src = rng.integers(0, n, 700)
+    dst = rng.integers(0, n, 700)
+    pr = PageRank.from_edges(src, dst, n, lane_width=16)
+    pr.run(iters=5)
+    prog = pr._progs["resident"]
+    pr.run(iters=9)
+    assert pr._progs["resident"] is prog
+    assert prog._cache_size() == 1      # one trace serves every iters
+
+
+def test_pagerank_sweep_cached_zero_unchanged():
+    """The hoisted zero out_init is a shared device constant: repeated
+    sweeps must not mutate it (executors never donate it)."""
+    rng = np.random.default_rng(11)
+    n = 96
+    src = rng.integers(0, n, 400)
+    dst = rng.integers(0, n, 400)
+    pr = PageRank.from_edges(src, dst, n, lane_width=16)
+    r = jnp.full(n, 1.0 / n, jnp.float32)
+    s1 = np.asarray(pr.sweep(r))
+    s2 = np.asarray(pr.sweep(r))
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(pr._zero_init(jnp.float32)),
+                                  np.zeros(n, np.float32))
+
+
+# ------------------------------------------------- auto-kwargs validation
+
+def test_auto_conflicting_kwargs_rejected():
+    c = G.graph_case("uniform", 64, 4)
+    with pytest.raises(ValueError, match="fused"):
+        GR.BFS.from_edges(c.src, c.dst, c.num_nodes, backend="auto",
+                          fused=False)
+    with pytest.raises(ValueError, match="stage_b"):
+        GR.SSSP.from_edges(c.src, c.dst, c.weight, c.num_nodes,
+                           tune=True, stage_b="dense")
+    with pytest.raises(ValueError, match="cost"):
+        GR.ConnectedComponents.from_edges(
+            c.src, c.dst, c.num_nodes, backend="auto",
+            cost=CostModel(lane_width=16))
+    with pytest.raises(ValueError, match="fused"):
+        SpMV.from_coo(np.asarray([0]), np.asarray([0]),
+                      np.asarray([1.0]), (2, 2), backend="auto",
+                      fused=False)
+    with pytest.raises(ValueError, match="cost"):
+        PageRank.from_edges(np.asarray([0]), np.asarray([1]), 2,
+                            backend="auto", cost=CostModel(lane_width=16))
+    # tune=True next to an explicit non-default backend would drop the
+    # backend for the full measured space — same silent-ignore class
+    with pytest.raises(ValueError, match="backend"):
+        GR.BFS.from_edges(c.src, c.dst, c.num_nodes, backend="segsum",
+                          tune=True)
+
+
+def test_auto_default_kwargs_still_accepted(tmp_path):
+    """Default (non-conflicting) kwargs through the auto path still tune
+    and still match the reference — with the resident whole-run
+    measurement discipline (DESIGN.md §7) and a working warm cache."""
+    from repro import tune as tn
+    c = G.graph_case("powerlaw", 192, 5)
+    cache = str(tmp_path / "tune")
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, backend="auto",
+                            tune_cache_dir=cache)
+    assert app.tuning is not None and not app.tuning.cache_hit
+    np.testing.assert_array_equal(
+        app.run(0), GR.bfs_reference(c.src, c.dst, c.num_nodes, 0))
+    m0 = tn.measurement_count()
+    warm = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, backend="auto",
+                             tune_cache_dir=cache)
+    assert tn.measurement_count() == m0          # warm hit: 0 measurements
+    assert warm.tuning.cache_hit
+    np.testing.assert_array_equal(
+        warm.run(0), GR.bfs_reference(c.src, c.dst, c.num_nodes, 0))
