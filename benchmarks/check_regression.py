@@ -1,8 +1,12 @@
-"""Bench-regression guard: compare two BENCH_*.json files and fail when a
-checked-in speedup drops.
+"""Bench-regression guard: compare BENCH_*.json baseline/candidate pairs
+and fail when a checked-in speedup drops.
 
-``python -m benchmarks.check_regression OLD.json NEW.json [--min-ratio 0.9]
-[--min-resident-speedup 1.0]``
+``python -m benchmarks.check_regression OLD.json NEW.json [OLD2 NEW2 ...]
+[--min-ratio 0.9] [--min-resident-speedup 1.0]``
+
+Any number of ``(baseline, candidate)`` pairs runs in ONE invocation with
+a single summary table and a single exit code — CI guards the SpMV and
+graph trajectories in one step.
 
 Two row families are guarded, matched across the two files by their
 identity columns:
@@ -103,8 +107,10 @@ def _check_resident_floor(new_payload: dict, floor: float
     return failures, checked
 
 
-def check(old_path: str, new_path: str, min_ratio: float = 0.9,
-          min_resident_speedup: float = 1.0) -> int:
+def _check_pair(old_path: str, new_path: str, min_ratio: float,
+                min_resident_speedup: float) -> tuple[list, int, int]:
+    """One (baseline, candidate) comparison.  Returns
+    ``(failures, rows_checked, floor_rows_checked)``."""
     with open(old_path) as f:
         old_payload = json.load(f)
     with open(new_path) as f:
@@ -128,6 +134,26 @@ def check(old_path: str, new_path: str, min_ratio: float = 0.9,
         # vanishing from the new file must not pass the floor vacuously
         failures.append(("resident_floor", "powerlaw/* (rows missing)",
                          min_resident_speedup, 0.0, 0.0))
+    return failures, checked, floor_checked
+
+
+def check_many(pairs: list[tuple[str, str]], min_ratio: float = 0.9,
+               min_resident_speedup: float = 1.0) -> int:
+    """Guard every ``(baseline, candidate)`` pair; print one summary
+    table; return a single exit code (non-zero if ANY pair regressed)."""
+    failures, checked, floor_checked = [], 0, 0
+    summary = []
+    for old_path, new_path in pairs:
+        print(f"== {old_path} -> {new_path} ==")
+        f, c, fc = _check_pair(old_path, new_path, min_ratio,
+                               min_resident_speedup)
+        failures += f
+        checked += c
+        floor_checked += fc
+        summary.append((old_path, new_path, c, fc, len(f)))
+    print("\npair,rows_checked,floor_rows,failures")
+    for old_path, new_path, c, fc, nf in summary:
+        print(f"{old_path}->{new_path},{c},{fc},{nf}")
     if failures:
         print(f"\nregression_guard: {len(failures)} row(s) failed:",
               file=sys.stderr)
@@ -139,16 +165,23 @@ def check(old_path: str, new_path: str, min_ratio: float = 0.9,
     floor_note = (f" (resident floor {min_resident_speedup:.2f}x held on "
                   f"{floor_checked} powerlaw row(s))" if floor_checked
                   else "")
-    print(f"regression_guard: {checked} row(s) checked, none below "
-          f"{min_ratio:.2f}x{floor_note}")
+    print(f"regression_guard: {checked} row(s) checked across "
+          f"{len(pairs)} pair(s), none below {min_ratio:.2f}x{floor_note}")
     return 0
+
+
+def check(old_path: str, new_path: str, min_ratio: float = 0.9,
+          min_resident_speedup: float = 1.0) -> int:
+    """Single-pair form (kept for callers/tests of the original API)."""
+    return check_many([(old_path, new_path)], min_ratio,
+                      min_resident_speedup)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("old", help="baseline JSON (e.g. checked-in "
-                                "BENCH_spmv.json / BENCH_graph.json)")
-    ap.add_argument("new", help="freshly measured JSON")
+    ap.add_argument("files", nargs="+", metavar="OLD NEW",
+                    help="one or more (baseline, candidate) JSON pairs, "
+                         "flattened: OLD1 NEW1 [OLD2 NEW2 ...]")
     ap.add_argument("--min-ratio", type=float, default=0.9,
                     help="fail when new/old speedup falls below this "
                          "(default 0.9)")
@@ -157,8 +190,11 @@ def main() -> None:
                          "run_speedup_vs_host falls below this "
                          "(default 1.0)")
     args = ap.parse_args()
-    sys.exit(check(args.old, args.new, args.min_ratio,
-                   args.min_resident_speedup))
+    if len(args.files) < 2 or len(args.files) % 2:
+        ap.error("expected an even number of files: OLD NEW [OLD NEW ...]")
+    pairs = list(zip(args.files[0::2], args.files[1::2]))
+    sys.exit(check_many(pairs, args.min_ratio,
+                        args.min_resident_speedup))
 
 
 if __name__ == "__main__":

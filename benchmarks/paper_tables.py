@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.apps import SpMV, PageRank
 from repro.core import engine as eng
+from repro.core import ir
 from repro.core.plan import CostModel, build_plan
 from repro.core.seed import spmv_seed
 from repro.sparse import generators as G
@@ -193,6 +194,10 @@ def bench_spmv_exec(scale="small", lane: int = 128, iters: int = 5,
                           m.shape[0], m.shape[1],
                           CostModel(lane_width=lane))
         build_s = time.perf_counter() - t0
+        # static reach of the gather-coalescing pass on this dataset
+        # (DESIGN.md §8) — tracked per row so the pass's coverage is a
+        # first-class trajectory metric next to the speedups
+        coalesced_frac = ir.coalesce_stats(plan)["coalesced_fraction"]
         x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
         y0 = jnp.zeros(m.shape[0], jnp.float32)
 
@@ -245,7 +250,8 @@ def bench_spmv_exec(scale="small", lane: int = 128, iters: int = 5,
             }
             if (chosen.backend == "jax" and chosen.stage_b == "gather"
                     and chosen.lane_width == lane
-                    and chosen.max_windows_replace is None):
+                    and chosen.max_windows_replace is None
+                    and not chosen.coalesce):
                 # the chosen config IS one of the fixed modes: share its
                 # compiled instance (same program) for the same reason
                 runs["auto"] = _get_exec(chosen.fused)
@@ -278,6 +284,7 @@ def bench_spmv_exec(scale="small", lane: int = 128, iters: int = 5,
                 "us_per_call": round(t, 2),
                 "num_classes": plan.stats.num_classes,
                 "num_fused_launches": len(eng.fused_xla_classes(plan)),
+                "coalesced_fraction": coalesced_frac,
                 "speedup_vs_per_class":
                     round(times["per_class"] / t, 3),
                 "plan_build_s": round(build_s, 4),

@@ -19,9 +19,12 @@ end-to-end ``run_ms``; its ``--json`` output is the file checked in as
 ``--tuned`` adds ``mode="auto"`` / ``backend="auto"`` rows: per-dataset
 variant selection through :mod:`repro.tune`, recording the chosen config
 and the cold/warm tuning measurement counts (a warm rerun over the same
-``--tune-cache`` directory must record 0).  The regression guard
-(``python -m benchmarks.check_regression OLD NEW``) compares the
-``speedup_vs_per_class`` columns of two such JSON files.
+``--tune-cache`` directory must record 0).  Each spmv_exec row also
+reports ``coalesced_fraction`` — the share of nnz the gather-coalescing
+pass (DESIGN.md §8) serves from dense slice loads on that dataset.  The
+regression guard (``python -m benchmarks.check_regression OLD NEW [OLD2
+NEW2 ...]``) compares the ``speedup_vs_per_class`` columns of any number
+of (baseline, candidate) JSON pairs in one invocation.
 """
 from __future__ import annotations
 
@@ -163,7 +166,8 @@ def main() -> None:
     for r in exec_rows:
         print(f"spmv_exec_{r['dataset']}_{r['mode']},{r['us_per_call']:.1f},"
               f"{r['speedup_vs_per_class']:.2f}x;classes={r['num_classes']};"
-              f"launches={r['num_fused_launches']}{_chosen_str(r)}")
+              f"launches={r['num_fused_launches']};"
+              f"coalesced={r['coalesced_fraction']:.2f}{_chosen_str(r)}")
     build_rows = T.bench_plan_build()
     for r in build_rows:
         warm = r["cache_warm_s"]

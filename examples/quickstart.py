@@ -27,6 +27,12 @@ print(f"pattern classes: {st.num_classes}, "
 print(f"L/S histogram: { {k: round(v, 3) for k, v in sorted(st.ls_hist.items())} }")
 print(f"RMW writes after merge: {st.heads_total} (vs {st.nnz} scatter-adds)")
 
+# the information-code tree (DESIGN.md §8): the banded stripes are
+# contiguous index runs, so the coalescing pass can serve every nnz from
+# dense slice loads instead of gathers
+from repro.core import ir
+print(f"gather-coalescing reach: {ir.coalesce_stats(sp.plan)}")
+
 # repeated execution over mutable data (x) amortizes the analysis
 x = jnp.asarray(np.random.default_rng(0).standard_normal(m.shape[1]),
                 jnp.float32)

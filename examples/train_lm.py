@@ -10,7 +10,6 @@ The real deliverable invocation (~110M params, needs accelerators or
 patience):
     PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
 """
-import argparse
 import sys
 
 sys.argv = [sys.argv[0]] + sys.argv[1:]

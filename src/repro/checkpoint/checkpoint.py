@@ -11,7 +11,6 @@ Layout:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

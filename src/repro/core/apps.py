@@ -58,19 +58,22 @@ class SpMV:
                  cost: CostModel | None = None,
                  fused: bool = True,
                  stage_b: str = "auto",
+                 coalesce: bool = False,
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
                  tune_cache_dir: str | None = None) -> "SpMV":
         """``backend="auto"`` (or ``tune=True``) selects the execution
         variant per matrix via :mod:`repro.tune` — measured on this
         device, cached in ``tune_cache_dir`` so warm processes skip the
-        measurements; the decision is recorded in ``.tuning``."""
+        measurements; the decision is recorded in ``.tuning``.
+        ``coalesce=True`` opts in to the gather-coalescing lowering pass
+        (DESIGN.md §8); under ``backend="auto"`` it is a tuned axis."""
         seed = spmv_seed()
         access = {"row": rows, "col": cols}
         vals = np.asarray(vals)
         if backend == "auto" or tune:
             check_auto_kwargs("SpMV.from_coo", backend=backend, fused=fused,
-                              stage_b=stage_b, cost=cost)
+                              stage_b=stage_b, cost=cost, coalesce=coalesce)
             from repro.tune import autotune
             dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
                 else np.float32
@@ -87,7 +90,8 @@ class SpMV:
         cost = cost or CostModel(lane_width=lane_width)
         plan = _plan(seed, access, shape[0], shape[1], cost, plan_cache_dir)
         run = eng.make_executor(plan, {"value": vals}, backend=backend,
-                                fused=fused, stage_b=stage_b)
+                                fused=fused, stage_b=stage_b,
+                                coalesce=coalesce)
         return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype)
 
     @classmethod

@@ -1,4 +1,8 @@
-"""Plan execution engine — runs a :class:`BlockPlan` on a chosen backend.
+"""Plan execution engine — backend emitters over the lowered code tree.
+
+Lowering decisions live in :mod:`repro.core.ir` (the information-code
+tree: fuse_sections -> choose_stage_b -> coalesce_gathers, DESIGN.md §8);
+this module only *emits* runnable programs by walking the lowered tree.
 
 Backends:
   * ``jax``    — pure-XLA execution of the specialized plan (class-sorted
@@ -6,7 +10,7 @@ Backends:
     the portable path and the one used inside the distributed stack.
   * ``pallas`` — the Pallas TPU kernels in ``repro.kernels``; validated with
     ``interpret=True`` on CPU, targeted at TPU VMEM/MXU.
-  * ``segsum`` — CPU-optimal single segment-sum form (add only).
+  * ``segsum`` — CPU-optimal single segment-sum form.
   * ``reference`` — direct scatter oracle (un-optimized seed semantics).
   * ``baseline_gather`` — what a conservative compiler emits: native gather
     + full scatter-add, no pattern specialization (the paper's icc baseline
@@ -23,6 +27,17 @@ Execution modes (``fused`` flag, default True):
   * **per-class** (``fused=False``) — the paper's one-launch-per-pattern-
     class form (kept for A/B benchmarking and as the bitwise oracle of the
     fused path).
+
+``coalesce=True`` additionally runs the gather-coalescing pass
+(:func:`repro.core.ir.coalesce_gathers`): launches whose blocks hold
+contiguous/strided gather-index runs are re-lowered to dense unaligned
+``lax.dynamic_slice`` vector loads — bitwise-identical by construction.
+
+Stage A and stage B are **rank-polymorphic** over a trailing lane axis
+(DESIGN.md §8): gathered arrays may carry extra trailing dims (SpMM's
+``x`` is ``(data_len, D)``), per-nnz elementwise arrays are broadcast with
+trailing singleton axes, and the ladder/write-back reduce along the lane
+axis only — SpMM is literally the SpMV program with a 2-D lane.
 
 The executor factory performs the Data Transfer step once (physical nnz
 reorder into class-sorted, in-block-sorted order) and returns a jitted
@@ -42,7 +57,6 @@ double-buffer in place instead of allocating a fresh output per call.
 """
 from __future__ import annotations
 
-import functools
 from typing import Mapping
 
 import jax
@@ -50,15 +64,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import feature_table as ft
-from repro.core.plan import GATHER_FALLBACK, BlockPlan, PatternClass
+from repro.core import ir
+from repro.core.plan import BlockPlan
 from repro.core.seed import (CodeSeed, reduce_identity_for,
                              reference_execute)
+
+# lowering helpers re-exported for callers that inspect launch lists
+# (benchmarks, tune.cost, kernels.unroll_spmv) — implementations in ir.py
+fused_sections = ir.fused_sections
+fused_xla_classes = ir.fused_xla_classes
+section_full_mask = ir.section_full_mask
+_FUSE_MIN_CLASSES = ir.FUSE_MIN_CLASSES
 
 _SEG_PAD = -(2 ** 30)
 
 
 def _padded_view_len(data_len: int, n: int) -> int:
     return max(1, -(-data_len // n)) * n
+
+
+def _expand_trailing(a: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """Append trailing singleton axes until ``a.ndim == ndim`` — the §8
+    rank rule: lane metadata (segment ids, offsets) and per-nnz
+    elementwise arrays broadcast over any trailing lane axes."""
+    if a.ndim >= ndim:
+        return a
+    return a.reshape(a.shape + (1,) * (ndim - a.ndim))
 
 
 def reorder_elementwise(plan: BlockPlan, arr: np.ndarray | jnp.ndarray,
@@ -77,14 +108,24 @@ def reorder_elementwise(plan: BlockPlan, arr: np.ndarray | jnp.ndarray,
     return flat.reshape(plan.num_blocks, plan.lane_width)
 
 
-def _pad_gathered(plan: BlockPlan, g: jnp.ndarray) -> jnp.ndarray:
-    """Pad a gathered dense array to a whole number of lane tiles and view it
-    as (num_windows, N) — the tile-granular unit of the vload path."""
-    n = plan.lane_width
-    total = _padded_view_len(plan.data_len, n)
+def _pad_flat(plan: BlockPlan, g: jnp.ndarray) -> jnp.ndarray:
+    """Pad a gathered dense array to a whole number of lane tiles (flat
+    view) — the address space of both the window and the coalesced-slice
+    loads."""
+    total = _padded_view_len(plan.data_len, plan.lane_width)
     pad = total - g.shape[0]
-    gp = jnp.pad(g, (0, pad)) if pad else g
-    return gp.reshape(total // n, n)
+    if pad:
+        g = jnp.pad(g, ((0, pad),) + ((0, 0),) * (g.ndim - 1))
+    return g
+
+
+def _pad_gathered(plan: BlockPlan, g: jnp.ndarray) -> jnp.ndarray:
+    """Pad a gathered dense array to a whole number of lane tiles and view
+    it as (num_windows, N, ...) — the tile-granular unit of the vload
+    path."""
+    n = plan.lane_width
+    gp = _pad_flat(plan, g)
+    return gp.reshape((gp.shape[0] // n, n) + g.shape[1:])
 
 
 def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
@@ -93,12 +134,14 @@ def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
     """§5: log-step masked shift-reduce.  ``op_flag`` static steps; runs are
     consecutive (the Data Transfer sort guarantees it); after the loop each
     segment's *head lane* holds the full segment reduction.  The shift pad
-    identity is derived from ``term.dtype`` unless given (DESIGN.md §3a)."""
+    identity is derived from ``term.dtype`` unless given (DESIGN.md §3a).
+
+    Rank-polymorphic: ``term`` is ``(B, N)`` or ``(B, N, ...)`` with any
+    trailing lane axes; ``seg`` is always ``(B, N)`` and broadcasts."""
     from repro.core.seed import REDUCE_OPS
     op, _ = REDUCE_OPS[reduce]
     if identity is None:
         identity = reduce_identity_for(reduce, term.dtype)
-    bc, n = term.shape
     if op_flag == ft.FULL_REDUCE:
         # paper: single-segment block -> architecture-native reduction.  On
         # XLA a native row reduce (jnp.sum) does not pin its accumulation
@@ -111,25 +154,28 @@ def segmented_reduce(term: jnp.ndarray, seg: jnp.ndarray, op_flag: int,
         # Pallas kernel keeps the true native reduction.
         total = _halving_tree(term, op, identity)
         return term.at[:, 0].set(total[:, 0])
+    trailing = ((0, 0),) * (term.ndim - 2)
     for k in range(op_flag):
         d = 1 << k
-        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)) + trailing,
                           constant_values=identity)
         seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
                             constant_values=_SEG_PAD)
-        term = jnp.where(seg == seg_shift, op(term, shifted), term)
+        mask = _expand_trailing(seg == seg_shift, term.ndim)
+        term = jnp.where(mask, op(term, shifted), term)
     return term
 
 
 def _halving_tree(total: jnp.ndarray, op, identity) -> jnp.ndarray:
-    """(B, N) -> (B, 1) full reduction by pairwise halving along axis 1 —
-    a FIXED combine order in every surrounding program (elementwise ops
-    cannot be reassociated by XLA), which is what every bitwise guarantee
-    in this engine leans on; see the FULL_REDUCE note in
+    """(B, N, ...) -> (B, 1, ...) full reduction by pairwise halving along
+    axis 1 — a FIXED combine order in every surrounding program
+    (elementwise ops cannot be reassociated by XLA), which is what every
+    bitwise guarantee in this engine leans on; see the FULL_REDUCE note in
     :func:`segmented_reduce`."""
+    trailing = ((0, 0),) * (total.ndim - 2)
     while total.shape[1] > 1:
         if total.shape[1] % 2:
-            total = jnp.pad(total, ((0, 0), (0, 1)),
+            total = jnp.pad(total, ((0, 0), (0, 1)) + trailing,
                             constant_values=identity)
         total = op(total[:, 0::2], total[:, 1::2])
     return total
@@ -146,146 +192,70 @@ def tree_sum(x: jnp.ndarray) -> jnp.ndarray:
     return _halving_tree(x.reshape(1, -1), jnp.add, 0)[0, 0]
 
 
-def _gather_class_values(plan: BlockPlan, c: PatternClass, s: slice,
-                         meta: Mapping[str, jnp.ndarray],
-                         mutable: Mapping[str, jnp.ndarray]) -> dict:
-    """§6: produce per-lane gathered values for one pattern class."""
+def _gather_launch_values(plan: BlockPlan, launch: ir.Launch, s: slice,
+                          meta: Mapping[str, jnp.ndarray],
+                          mutable: Mapping[str, jnp.ndarray],
+                          co: dict | None) -> dict:
+    """§6: produce per-lane gathered values for one launch, by its lowered
+    gather idiom (fallback gather / window tiles / stream vload /
+    coalesced dense slices)."""
     seed = plan.seed
     vals = {}
     if seed.gather_index is None:
         return vals
     n = plan.lane_width
-    if c.ls_flag == GATHER_FALLBACK:
+    if launch.gather == ir.FALLBACK:
         gi = meta["gather_idx"][s]
         for g in seed.gathered:
-            vals[g] = mutable[g][gi]
+            vals[g] = jnp.asarray(mutable[g])[gi]
         return vals
-    win = meta["window_ids"][s][:, :c.ls_flag]            # (Bc, M)
+    if launch.gather == ir.COALESCED:
+        for g in seed.gathered:
+            arr = jnp.asarray(mutable[g])
+            flat = _pad_flat(plan, arr)
+            sizes = (n,) + arr.shape[1:]
+            zeros = (jnp.int32(0),) * (arr.ndim - 1)
+            tiles = jax.vmap(lambda st: jax.lax.dynamic_slice(
+                flat, (st,) + zeros, sizes))(co["starts"])   # (Bc, N, ...)
+            if co["off"] is None:
+                vals[g] = tiles                 # contiguous run: pure slice
+            else:
+                vals[g] = jnp.take_along_axis(
+                    tiles, _expand_trailing(co["off"], tiles.ndim), axis=1)
+        return vals
+    win = meta["window_ids"][s][:, :launch.ls_flag]           # (Bc, M)
     for g in seed.gathered:
-        gv = _pad_gathered(plan, mutable[g])[win]          # (Bc, M, N) tile loads
-        if c.stream:
-            vals[g] = gv[:, 0]                             # pure vload
+        gv = _pad_gathered(plan, jnp.asarray(mutable[g]))[win]
+        if launch.gather == ir.STREAM:
+            vals[g] = gv[:, 0]                                # pure vload
         else:
-            flat = gv.reshape(gv.shape[0], c.ls_flag * n)
+            flat = gv.reshape((gv.shape[0], launch.ls_flag * n)
+                              + gv.shape[3:])
             lane = (meta["lane_slot"][s].astype(jnp.int32) * n
                     + meta["lane_offset"][s].astype(jnp.int32))
-            vals[g] = jnp.take_along_axis(flat, lane, axis=1)
+            vals[g] = jnp.take_along_axis(
+                flat, _expand_trailing(lane, flat.ndim), axis=1)
     return vals
 
 
-def _merge_section(classes: list[PatternClass], ls_flag: int,
-                   lane_width: int) -> PatternClass:
-    """Collapse contiguous pattern classes into one fused launch section.
-
-    The merged ``op_flag`` is the ladder depth covering every member class:
-    extra shift-reduce steps are exact no-ops (DESIGN.md §3), and window
-    slots beyond a block's own ``ls`` are never selected by its lane
-    permutation (``window_ids`` padding repeats the last valid window).
-    """
-    import math
-    full = int(math.ceil(math.log2(max(lane_width, 2))))
-    if all(c.op_flag == ft.FULL_REDUCE for c in classes):
-        op = ft.FULL_REDUCE
-    else:
-        op = max(full if c.op_flag == ft.FULL_REDUCE else c.op_flag
-                 for c in classes)
-    return PatternClass(ls_flag=ls_flag, op_flag=op,
-                        stream=all(c.stream for c in classes),
-                        start=min(c.start for c in classes),
-                        stop=max(c.stop for c in classes))
-
-
-def fused_sections(plan: BlockPlan) -> list[PatternClass]:
-    """The fused launch list for the Pallas backend: at most one
-    gather-fallback section plus one vload section (class binning sorts
-    fallback classes first, so each section is a contiguous exec-order
-    block range)."""
-    fb = [c for c in plan.classes if c.ls_flag == GATHER_FALLBACK]
-    vl = [c for c in plan.classes if c.ls_flag != GATHER_FALLBACK]
-    sections = []
-    for group, ls in ((fb, GATHER_FALLBACK),
-                      (vl, max((c.ls_flag for c in vl), default=0))):
-        if not group:
-            continue
-        sec = _merge_section(group, ls, plan.lane_width)
-        assert sec.num_blocks == sum(c.num_blocks for c in group), \
-            "pattern classes of one section must be exec-contiguous"
-        sections.append(sec)
-    return sections
-
-
-# Fusing is a dispatch/fragmentation optimization: below this many pattern
-# classes the per-class specialized launches (stream copies, narrow window
-# loads) are already optimal and merging only costs padding, so the fused
-# mode keeps them (measured on the small suite, DESIGN.md §3).
-_FUSE_MIN_CLASSES = 4
-
-
-def fused_xla_classes(plan: BlockPlan) -> list[PatternClass]:
-    """The fused launch list for the XLA backend: adjacent pattern classes
-    merged by ``op_flag`` into op-groups that gather directly through the
-    post-sort ``gather_idx``.  On XLA the tile-granular window loads lower
-    to a gather HLO over the identical float words, so a merged group loses
-    nothing semantically (bitwise-equal to the per-class launches); and
-    because ``op`` is the minor exec-order key, same-depth blocks are
-    contiguous — each block gets exactly the shift-reduce depth its class
-    needs, in at most ``2 * (log2(N) + 2)`` static slices of one jitted
-    graph instead of one launch per (ls, op, stream) class.
-
-    Fragmented plans (many small classes — the irregular inputs the paper
-    targets) collapse ~10x; plans already at a handful of launches keep
-    their per-class specializations, so the fused mode never regresses the
-    regular inputs where per-class stream/window forms are the best code.
-    """
-    groups: list[PatternClass] = []
-    for c in plan.classes:
-        if groups and groups[-1].op_flag == c.op_flag \
-                and groups[-1].stop == c.start:
-            prev = groups[-1]
-            groups[-1] = PatternClass(ls_flag=GATHER_FALLBACK,
-                                      op_flag=prev.op_flag, stream=False,
-                                      start=prev.start, stop=c.stop)
-        else:
-            groups.append(PatternClass(ls_flag=GATHER_FALLBACK,
-                                       op_flag=c.op_flag, stream=False,
-                                       start=c.start, stop=c.stop))
-    if len(plan.classes) <= max(_FUSE_MIN_CLASSES, 2 * len(groups)):
-        return list(plan.classes)
-    return groups
-
-
-def section_full_mask(plan: BlockPlan, sec: PatternClass) -> np.ndarray | None:
-    """Per-block native-reduction flags for a fused section: True where the
-    covering pattern class is ``FULL_REDUCE`` (single-segment block), so the
-    fused launch can keep the architecture-native reduction for exactly the
-    blocks the per-class path would give it to.  None when the section has
-    no such member (or is itself pure ``FULL_REDUCE``)."""
-    if sec.op_flag == ft.FULL_REDUCE:
-        return None
-    mask = np.zeros(sec.num_blocks, dtype=bool)
-    for c in plan.classes:
-        if (c.op_flag == ft.FULL_REDUCE
-                and c.start >= sec.start and c.stop <= sec.stop):
-            mask[c.start - sec.start:c.stop - sec.start] = True
-    return mask if mask.any() else None
-
-
 def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
-                 classes: list[PatternClass]) -> jnp.ndarray:
-    """Run the given launch list (pattern classes or fused op-groups);
-    return the (B, N) post-reduce lane matrix in exec-block order.  Mixed
-    native/ladder sections never occur here — ``fused_xla_classes`` merges
-    only equal-op classes, so per-block full-reduce selection is a Pallas
-    concern (``ops.make_stage_a``)."""
+                 launches: list[ir.Launch], co_meta: dict) -> jnp.ndarray:
+    """Walk the lowered launch list; return the (B, N, ...) post-reduce
+    lane matrix in exec-block order.  Mixed native/ladder sections never
+    occur here — ``fuse_sections`` merges only equal-op classes on the
+    XLA backend, so per-block full-reduce selection is a Pallas concern
+    (``ops.make_stage_a``)."""
     seed = plan.seed
     parts = []
-    for c in classes:
-        s = plan.class_slice(c)
-        vals = _gather_class_values(plan, c, s, meta, mutable)
+    for i, launch in enumerate(launches):
+        s = slice(launch.start, launch.stop)
+        vals = _gather_launch_values(plan, launch, s, meta, mutable,
+                                     co_meta.get(i))
+        rank = max((v.ndim for v in vals.values()), default=2)
         for e in seed.elementwise:
-            vals[e] = elem_exec[e][s]
+            vals[e] = _expand_trailing(elem_exec[e][s], rank)
         term = seed.combine(vals)
-        red = segmented_reduce(term, meta["seg_ids"][s], c.op_flag,
+        red = segmented_reduce(term, meta["seg_ids"][s], launch.op_flag,
                                seed.reduce)
         parts.append(red)
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
@@ -294,24 +264,27 @@ def _stage_a_jax(plan: BlockPlan, meta, elem_exec, mutable,
 def _stage_b(plan: BlockPlan, meta, lanes: jnp.ndarray,
              out_init: jnp.ndarray) -> jnp.ndarray:
     """Merged write-back (Fig. 4): one RMW per distinct (block, row) head.
-    Head values are re-gathered from the flat (B*N) lane stream in
+    Head values are re-gathered from the flat (B*N, ...) lane stream in
     row-sorted order, cross-block contributions to one row are combined by
     a log-step tree (deterministic float order), and the final scatter hits
     each output row at most once — XLA's unspecified accumulation order for
     duplicate scatter indices can therefore never perturb the result, which
     is what makes fused and per-class launches bitwise-comparable end to
     end (DESIGN.md §3)."""
-    hv = lanes.reshape(-1)[meta["head_pos_rowsorted"]]
+    hv = lanes.reshape((-1,) + lanes.shape[2:])[meta["head_pos_rowsorted"]]
     seed = plan.seed
     seg = meta["head_row_seg"]
     from repro.core.seed import REDUCE_OPS
     op, _ = REDUCE_OPS[seed.reduce]
     identity = reduce_identity_for(seed.reduce, hv.dtype)
+    trailing = ((0, 0),) * (hv.ndim - 1)
     for k in range(int(meta["head_tree_depth"])):
         d = 1 << k
-        shifted = jnp.pad(hv[d:], (0, d), constant_values=identity)
+        shifted = jnp.pad(hv[d:], ((0, d),) + trailing,
+                          constant_values=identity)
         seg_shift = jnp.pad(seg[d:], (0, d), constant_values=_SEG_PAD)
-        hv = jnp.where(seg == seg_shift, op(hv, shifted), hv)
+        hv = jnp.where(_expand_trailing(seg == seg_shift, hv.ndim),
+                       op(hv, shifted), hv)
     vals = hv[meta["head_run_starts"]]
     rows = meta["head_unique_rows"]
     if seed.reduce == "add":
@@ -361,20 +334,21 @@ def _stage_b_dense(plan: BlockPlan, meta, lanes: jnp.ndarray,
     the dense head-row buffer (non-head lanes land in the discard bucket at
     ``out_len``), avoiding the flat B*N re-gather of :func:`_stage_b`."""
     rows = meta["lane_rows"]
-    flat = lanes.reshape(-1)
+    flat = lanes.reshape((-1,) + lanes.shape[2:])
     seed = plan.seed
     n_out = plan.out_len
+    shape = (n_out + 1,) + flat.shape[1:]
     identity = reduce_identity_for(seed.reduce, flat.dtype)
     if seed.reduce == "add":
-        acc = jnp.zeros(n_out + 1, flat.dtype).at[rows].add(flat)
+        acc = jnp.zeros(shape, flat.dtype).at[rows].add(flat)
         return out_init + acc[:n_out]
     if seed.reduce == "mul":
-        acc = jnp.ones(n_out + 1, flat.dtype).at[rows].multiply(flat)
+        acc = jnp.ones(shape, flat.dtype).at[rows].multiply(flat)
         return out_init * acc[:n_out]
     if seed.reduce == "max":
-        acc = jnp.full(n_out + 1, identity, flat.dtype).at[rows].max(flat)
+        acc = jnp.full(shape, identity, flat.dtype).at[rows].max(flat)
         return jnp.maximum(out_init, acc[:n_out])
-    acc = jnp.full(n_out + 1, identity, flat.dtype).at[rows].min(flat)
+    acc = jnp.full(shape, identity, flat.dtype).at[rows].min(flat)
     return jnp.minimum(out_init, acc[:n_out])
 
 
@@ -393,21 +367,30 @@ def reorder_static(plan: BlockPlan, static_data: Mapping[str, np.ndarray]
 def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                  backend: str = "jax", interpret: bool | None = None,
                  fused: bool = True, stage_b: str = "auto",
-                 elem_exec: Mapping[str, jnp.ndarray] | None = None):
+                 elem_exec: Mapping[str, jnp.ndarray] | None = None,
+                 coalesce: bool = False):
     """The raw sweep body ``fn(mutable: dict, out_init) -> out`` — the same
     stage-A/stage-B program :func:`make_executor` jits, without the jit
     boundary, for embedding inside ``lax.while_loop`` / ``fori_loop``
     fixpoint drivers (DESIGN.md §7).
 
+    The plan is first lowered through the information-code-tree pipeline
+    (:func:`repro.core.ir.lower` — fuse/stage-B/coalesce passes per the
+    ``fused`` / ``stage_b`` / ``coalesce`` toggles); the emitter below
+    walks the lowered launch list and makes no lowering decisions itself.
+
     All host-side constants (reordered elementwise arrays, lane metadata,
-    write-back structure) are staged to the device HERE, once: tracing the
-    returned function inside a resident loop closes over device arrays and
-    re-uploads nothing.  Because the standalone executor is literally
-    ``jax.jit`` of this function, a resident loop iteration is bitwise
-    identical to a standalone executor call."""
+    write-back structure, coalesced slice bases) are staged to the device
+    HERE, once: tracing the returned function inside a resident loop
+    closes over device arrays and re-uploads nothing.  Because the
+    standalone executor is literally ``jax.jit`` of this function, a
+    resident loop iteration is bitwise identical to a standalone executor
+    call."""
     seed = plan.seed
     if elem_exec is None:
         elem_exec = reorder_static(plan, static_data)
+    tree = ir.lower(plan, backend=backend, fused=fused, stage_b=stage_b,
+                    coalesce=coalesce)
     meta = {
         "window_ids": jnp.asarray(plan.window_ids),
         "lane_slot": jnp.asarray(plan.lane_slot),
@@ -415,26 +398,27 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         "seg_ids": jnp.asarray(plan.seg_ids),
         "gather_idx": jnp.asarray(plan.gather_idx),
     }
-    if stage_b == "auto":
-        # always the collision-free gather write-back: it is both faster on
-        # XLA-CPU and the only form with a cross-program bitwise guarantee
-        # (DESIGN.md §3).  The dense head-buffer scatter stays explicit
-        # opt-in for TPU experiments.
-        stage_b = "gather"
-    if stage_b == "dense":
+    if tree.stage_b == "dense":
         meta["lane_rows"] = jnp.asarray(dense_head_rows(plan))
         write_back = _stage_b_dense
-    elif stage_b == "gather":
+    elif tree.stage_b == "gather":
         meta.update(head_write_meta(plan))
         write_back = _stage_b
     else:
-        raise ValueError(f"unknown stage_b {stage_b!r}")
+        write_back = None            # "fold": segsum stage A+B are one op
 
     if backend == "jax":
-        classes = fused_xla_classes(plan) if fused else plan.classes
+        launches = tree.launches
+        co_meta = {
+            i: {"starts": jnp.asarray(launch.slice_starts, jnp.int32),
+                "off": (None if launch.local_offset is None
+                        else jnp.asarray(launch.local_offset, jnp.int32))}
+            for i, launch in enumerate(launches)
+            if launch.gather == ir.COALESCED}
 
         def run(mutable, out_init):
-            lanes = _stage_a_jax(plan, meta, elem_exec, mutable, classes)
+            lanes = _stage_a_jax(plan, meta, elem_exec, mutable, launches,
+                                 co_meta)
             return write_back(plan, meta, lanes, out_init)
         return run
 
@@ -474,8 +458,9 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
             vals = {}
             for g in seed.gathered:
                 vals[g] = jnp.asarray(mutable[g])[gidx_j]
+            rank = max((v.ndim for v in vals.values()), default=1)
             for e in seed.elementwise:
-                vals[e] = elem_exec[e].reshape(-1)
+                vals[e] = _expand_trailing(elem_exec[e].reshape(-1), rank)
             term = seed.combine(vals)
             red = seg_reduce(term, rows_j, num_segments=plan.out_len + 1)
             return fold(out_init, red[:plan.out_len])
@@ -486,7 +471,8 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         if interpret is None:
             interpret = jax.devices()[0].platform != "tpu"
         stage_a = kops.make_stage_a(plan, meta, elem_exec,
-                                    interpret=interpret, fused=fused)
+                                    interpret=interpret,
+                                    launches=tree.launches)
 
         def run_pl(mutable, out_init):
             lanes = stage_a(mutable)
@@ -501,7 +487,7 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                   fused: bool = True, stage_b: str = "auto",
                   fuse_classes: bool | None = None,
                   elem_exec: Mapping[str, jnp.ndarray] | None = None,
-                  donate: bool = False):
+                  donate: bool = False, coalesce: bool = False):
     """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
 
     ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
@@ -515,7 +501,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     one-launch-per-pattern-class form.  ``stage_b`` selects the write-back:
     ``"gather"`` (head re-gather from the flat lane stream), ``"dense"``
     (scatter the full lane stream through the precomputed dense head-row
-    buffer), or ``"auto"`` (dense when heads dominate the lane stream).
+    buffer), or ``"auto"`` (the collision-free gather form).  ``coalesce``
+    enables the gather-coalescing lowering pass (DESIGN.md §8).
 
     ``donate=True`` jit-donates ``out_init``: a fixpoint driver that
     ping-pongs two buffers then reuses storage in place instead of
@@ -536,7 +523,7 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         fused = fuse_classes
     body = make_sweeper(plan, static_data, backend=backend,
                         interpret=interpret, fused=fused, stage_b=stage_b,
-                        elem_exec=elem_exec)
+                        elem_exec=elem_exec, coalesce=coalesce)
     run = jax.jit(body, donate_argnums=(1,) if donate else ())
     run.sweep_body = body
     return run

@@ -167,6 +167,49 @@ def reduce_features(write_idx_blocks: np.ndarray, lane_width: int,
                           write_sorted=srt.astype(np.int64))
 
 
+@dataclasses.dataclass(frozen=True)
+class GatherRunFeatures:
+    """Per-block *run* descriptors of the (post-sort) gather-index stream —
+    the trace-analysis input of the ``coalesce_gathers`` lowering pass
+    (repro.core.ir): a block whose whole index footprint fits one
+    lane-width window can be served by ONE dense unaligned vector load
+    (``lax.dynamic_slice``) plus a static in-tile permutation, instead of
+    a per-lane gather.  The span test subsumes contiguous runs (span ==
+    N-1 with identity permutation) and small-stride runs (stride ``s``
+    over ``k`` lanes qualifies whenever ``s * (k - 1) < N``)."""
+
+    lane_width: int
+    base: np.ndarray        # (B,) int64 — clamped slice start per block
+    span: np.ndarray        # (B,) int64 — max(idx) - min(idx) per block
+    coalescible: np.ndarray  # (B,) bool — span fits one lane-width window
+    identity: np.ndarray    # (B,) bool — idx == base + iota (pure slice)
+
+
+def gather_run_features(gather_idx_blocks: np.ndarray, lane_width: int,
+                        data_len: int) -> GatherRunFeatures:
+    """Detect contiguous/strided index runs per block (see
+    :class:`GatherRunFeatures`).
+
+    ``data_len`` bounds the padded dense view (``ceil(data_len / N) * N``
+    elements): the slice start is clamped so ``base + N`` never leaves the
+    padded view — XLA's ``dynamic_slice`` clamps out-of-range starts
+    silently, which would shift every in-tile offset, so the clamp must
+    happen HERE where the offsets are derived."""
+    b, n = gather_idx_blocks.shape
+    assert n == lane_width
+    lo = gather_idx_blocks.min(axis=1).astype(np.int64)
+    hi = gather_idx_blocks.max(axis=1).astype(np.int64)
+    span = hi - lo
+    padded = max(1, -(-data_len // n)) * n
+    base = np.minimum(lo, max(padded - n, 0))
+    coalescible = span < n
+    iota = np.arange(n, dtype=np.int64)[None, :]
+    identity = coalescible & (
+        gather_idx_blocks == (base[:, None] + iota)).all(axis=1)
+    return GatherRunFeatures(lane_width=lane_width, base=base, span=span,
+                             coalescible=coalescible, identity=identity)
+
+
 def _hash_payload(gf: GatherFeatures, rf: ReduceFeatures) -> np.ndarray:
     """The per-block feature payload hashed by Fig.3(c) column hashing."""
     return np.concatenate([

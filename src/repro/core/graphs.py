@@ -267,7 +267,8 @@ def _executor_kwargs(backend, fused, stage_b, interpret):
 
 def check_auto_kwargs(name: str, *, backend: str = "auto",
                       fused: bool = True, stage_b: str = "auto",
-                      cost=None, interpret: bool | None = None) -> None:
+                      cost=None, interpret: bool | None = None,
+                      coalesce: bool = False) -> None:
     """``backend="auto"`` / ``tune=True`` hand variant selection to the
     tuner — an explicit ``fused`` / ``stage_b`` / ``cost`` / ``interpret``
     (or a non-default backend next to ``tune=True``) alongside it used to
@@ -288,6 +289,8 @@ def check_auto_kwargs(name: str, *, backend: str = "auto",
         conflicts.append("cost")
     if interpret is not None:
         conflicts.append("interpret")
+    if coalesce is not False:
+        conflicts.append("coalesce")
     if conflicts:
         raise ValueError(
             f"{name}: backend='auto'/tune=True selects the execution "

@@ -100,13 +100,15 @@ class CodeSeed:
         return REDUCE_OPS[self.reduce][1]
 
 
-def spmv_seed() -> CodeSeed:
-    """SpMV over COO (paper Alg. 5)."""
+def spmv_seed(reduce: str = "add") -> CodeSeed:
+    """SpMV over COO (paper Alg. 5).  ``reduce`` generalizes the plain
+    (+, x) product to the other semirings (tropical SpMV/SpMM) — same
+    access pattern, same plan, different reduce ladder op."""
     return CodeSeed(name="spmv", output="y", out_index="row",
                     gather_index="col", gathered=("x",),
                     elementwise=("value",),
                     combine=lambda v: v["value"] * v["x"],
-                    reduce="add")
+                    reduce=reduce)
 
 
 def pagerank_seed() -> CodeSeed:
@@ -126,7 +128,12 @@ def pagerank_seed() -> CodeSeed:
 def reference_execute(seed: CodeSeed, access: Mapping[str, np.ndarray],
                       data: Mapping[str, jnp.ndarray], out_init: jnp.ndarray,
                       nnz: int | None = None) -> jnp.ndarray:
-    """Direct scatter oracle — the un-optimized semantics of the seed."""
+    """Direct scatter oracle — the un-optimized semantics of the seed.
+
+    Rank-polymorphic like the engine (DESIGN.md §8): gathered arrays may
+    carry trailing lane axes (SpMM gathers whole rows of B), and per-nnz
+    elementwise arrays broadcast against them with trailing singleton
+    axes, so one oracle covers SpMV and SpMM."""
     out_idx = jnp.asarray(access[seed.out_index])
     nnz = int(out_idx.shape[0]) if nnz is None else nnz
     vals = {}
@@ -134,8 +141,10 @@ def reference_execute(seed: CodeSeed, access: Mapping[str, np.ndarray],
         gi = jnp.asarray(access[seed.gather_index])
         for g in seed.gathered:
             vals[g] = jnp.asarray(data[g])[gi]
+    rank = max((v.ndim for v in vals.values()), default=1)
     for e in seed.elementwise:
-        vals[e] = jnp.asarray(data[e])
+        ev = jnp.asarray(data[e])
+        vals[e] = ev.reshape(ev.shape + (1,) * (rank - ev.ndim))
     term = seed.combine(vals)
     if seed.reduce == "add":
         return out_init.at[out_idx].add(term)

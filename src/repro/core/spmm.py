@@ -1,26 +1,28 @@
 """SpMM: sparse x dense matrix product on the Intelligent-Unroll plan.
 
 ``Y = A_sparse @ B`` generalizes the paper's SpMV seed to row-vector
-values: the gather through ``col`` fetches whole rows of B (each row is a
-run of lane tiles — the ``L/S=1`` stream pattern at row granularity, the
-same structure the MoE dispatch kernel executes), and the §5 reduction
-machinery collapses per-(block, output-row) partial sums before the
-merged write-back.
+values, and since the engine's stage A / stage B are **rank-polymorphic**
+over trailing lane axes (DESIGN.md §8), SpMM is literally the SpMV
+program executed with a 2-D lane: the gather through ``col`` fetches
+whole rows of B (``(Bc, N, D)`` instead of ``(Bc, N)``), the per-nnz
+``value`` array broadcasts with a trailing singleton axis, and the §5
+ladder plus the merged write-back reduce along the lane axis only.
+
+There is no separate SpMM executor any more: ``from_coo`` builds the same
+``engine.make_executor`` the SpMV path uses, which means SpMM gets the
+full semiring reduce set (``reduce="min"/"max"/"mul"``), the fused /
+per-class launch lists, the segsum backend, the gather-coalescing pass,
+and ``backend="auto"`` input-adaptive tuning — all from one pipeline.
+The Pallas emitter is rank-1-only (its kernels carry scalar lanes), so
+``backend="pallas"`` is rejected loudly.
 
 Reuses the 1-D BlockPlan verbatim: the plan is a property of the access
 arrays only (the paper's point) — the value rank is an execution detail.
-The executor itself is a row-vector variant of the XLA path (2-D lanes
-don't fit ``engine.make_executor``'s scalar-lane launches yet), but the
-*interface* is at parity with :class:`repro.core.apps.SpMV`: ``backend``
-/ ``fused`` / ``plan_cache_dir`` kwargs, plus ``backend="auto"`` /
-``tune=True`` input-adaptive selection over the fused and per-class
-launch lists via :mod:`repro.tune`.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,41 +30,7 @@ from repro.core import engine as eng
 from repro.core.plan import BlockPlan, CostModel
 from repro.core.seed import spmv_seed
 
-
-def _make_run(plan: BlockPlan, val_exec: jnp.ndarray, fused: bool):
-    """Build the jitted 2-D executor for one launch-list choice.
-
-    ``fused=True`` runs the merged op-group launch list
-    (``engine.fused_xla_classes`` — same legality argument as the 1-D
-    path: groups gather directly through the post-sort ``gather_idx`` and
-    each block gets exactly its class's ladder depth); ``fused=False``
-    keeps one launch per pattern class.
-    """
-    seed = plan.seed
-    gidx = jnp.asarray(plan.gather_idx, jnp.int32)              # (Bl,N)
-    head_pos = jnp.asarray(plan.head_pos)
-    head_rows = jnp.asarray(plan.head_rows)
-    seg_ids = jnp.asarray(plan.seg_ids)
-    launch_list = eng.fused_xla_classes(plan) if fused else plan.classes
-    # static per-launch op flags drive the same specialized reduce
-    classes = [(c.op_flag, c.start, c.stop) for c in launch_list]
-    reduce = seed.reduce
-
-    @jax.jit
-    def run(bmat, y_init):
-        d = bmat.shape[1]
-        parts = []
-        for op_flag, s0, s1 in classes:
-            rowsv = bmat[gidx[s0:s1]]                   # (Bc, N, D) rows
-            term = val_exec[s0:s1][:, :, None].astype(bmat.dtype) * rowsv
-            term = _segmented_reduce_2d(term, seg_ids[s0:s1], op_flag,
-                                        reduce=reduce)
-            parts.append(term)
-        lanes = jnp.concatenate(parts, 0)               # (Bl, N, D)
-        hv = lanes.reshape(-1, d)[head_pos]
-        return y_init.at[head_rows].add(hv.astype(y_init.dtype))
-
-    return run
+_BACKENDS = ("jax", "segsum", "auto")
 
 
 @dataclasses.dataclass
@@ -70,6 +38,7 @@ class SpMM:
     plan: BlockPlan
     shape: tuple[int, int]
     _run: object
+    reduce: str = "add"
     tuning: object | None = None   # TuningResult when built via backend="auto"
 
     @classmethod
@@ -78,86 +47,56 @@ class SpMM:
                  backend: str = "jax",
                  cost: CostModel | None = None,
                  fused: bool = True,
+                 stage_b: str = "auto",
+                 coalesce: bool = False,
+                 reduce: str = "add",
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
                  tune_cache_dir: str | None = None) -> "SpMM":
         from repro.core import planio
-        if backend not in ("jax", "auto"):
+        if backend not in _BACKENDS:
             raise ValueError(
-                f"SpMM supports backend='jax' or 'auto' (got {backend!r}); "
-                "the 2-D value path has no pallas/segsum form yet")
-        seed = spmv_seed()
+                f"SpMM supports backend in {_BACKENDS} (got {backend!r}); "
+                "the Pallas emitter carries scalar lanes only "
+                "(rank-polymorphism rules, DESIGN.md §8)")
+        seed = spmv_seed(reduce=reduce)
         access = {"row": rows, "col": cols}
         vals = np.asarray(vals)
         if backend == "auto" or tune:
             from repro.core.graphs import check_auto_kwargs
             check_auto_kwargs("SpMM.from_coo", backend=backend,
-                              fused=fused, cost=cost)
-            from repro.tune import Candidate, autotune
-            space = [Candidate(backend="jax", fused=f, lane_width=lane_width)
-                     for f in (True, False)]
+                              fused=fused, stage_b=stage_b, cost=cost,
+                              coalesce=coalesce)
+            from repro.tune import autotune, candidate_space
+            space = [c for c in candidate_space(seed,
+                                                lane_widths=(lane_width,))
+                     if c.backend != "pallas"]
             rng = np.random.default_rng(0)
             b_ex = jnp.asarray(rng.standard_normal(
                 (shape[1], 8)).astype(np.float32))
-            y0 = jnp.zeros((shape[0], 8), jnp.float32)
-            oracle = y0.at[jnp.asarray(np.asarray(rows))].add(
-                jnp.asarray(vals)[:, None]
-                * b_ex[jnp.asarray(np.asarray(cols))])
-
-            def factory(plan, cand, static_data, elem_exec):
-                run2d = _make_run(plan, elem_exec["value"], cand.fused)
-                return lambda mutable, y_init: run2d(mutable["b"], y_init)
-
+            y0 = jnp.full((shape[0], 8), seed.reduce_identity, jnp.float32)
             plan, run, result = autotune(
                 seed, access, shape[0], shape[1], {"value": vals},
-                {"b": b_ex}, y0, space=space,
+                {"x": b_ex}, y0, space=space,
                 tune_cache_dir=tune_cache_dir,
                 plan_cache_dir=plan_cache_dir,
-                exec_factory=factory, oracle=oracle)
-            return cls(plan=plan, shape=shape,
-                       _run=lambda bmat, y: run({"b": bmat}, y),
+                cache_extra="spmm:d8")
+            return cls(plan=plan, shape=shape, _run=run, reduce=reduce,
                        tuning=result)
         cost = cost or CostModel(lane_width=lane_width)
         plan = planio.cached_build_plan(seed, access, out_len=shape[0],
                                         data_len=shape[1], cost=cost,
                                         cache_dir=plan_cache_dir)
-        val_exec = eng.reorder_elementwise(plan, vals)              # (Bl,N)
-        return cls(plan=plan, shape=shape,
-                   _run=_make_run(plan, val_exec, fused))
+        run = eng.make_executor(plan, {"value": vals}, backend=backend,
+                                fused=fused, stage_b=stage_b,
+                                coalesce=coalesce)
+        return cls(plan=plan, shape=shape, _run=run, reduce=reduce)
 
     def matmat(self, bmat: jnp.ndarray,
                y_init: jnp.ndarray | None = None) -> jnp.ndarray:
         if y_init is None:
-            y_init = jnp.zeros((self.shape[0], bmat.shape[1]), bmat.dtype)
-        return self._run(bmat, y_init)
-
-
-def _segmented_reduce_2d(term: jnp.ndarray, seg: jnp.ndarray,
-                         op_flag: int, reduce: str = "add") -> jnp.ndarray:
-    """(Bc, N, D) log-step shift-reduce along lanes.
-
-    Add-only for now: the 2-D ladder pads shifted lanes with zeros and
-    the write-back accumulates with ``.add``, which is WRONG for any
-    other reduce — refuse loudly rather than silently adding (the
-    semiring SpMM generalization tracks DESIGN.md §3a).
-    """
-    if reduce != "add":
-        raise ValueError(
-            f"SpMM segmented reduce supports only reduce='add' (got "
-            f"{reduce!r}): the 2-D ladder pads with 0 and the write-back "
-            "scatter-adds, so a non-add semiring would silently produce "
-            "wrong results. Semiring SpMM is not implemented yet.")
-    from repro.core import feature_table as ft
-    bc, n, d = term.shape
-    if op_flag == ft.FULL_REDUCE:
-        total = jnp.sum(term, axis=1)
-        return term.at[:, 0, :].set(total)
-    steps = op_flag
-    for k in range(steps):
-        sft = 1 << k
-        shifted = jnp.pad(term[:, sft:], ((0, 0), (0, sft), (0, 0)))
-        seg_shift = jnp.pad(seg[:, sft:], ((0, 0), (0, sft)),
-                            constant_values=-(2 ** 30))
-        term = jnp.where((seg == seg_shift)[:, :, None],
-                         term + shifted, term)
-    return term
+            from repro.core.seed import reduce_identity_for
+            y_init = jnp.full((self.shape[0], bmat.shape[1]),
+                              reduce_identity_for(self.reduce, bmat.dtype),
+                              bmat.dtype)
+        return self._run({"x": bmat}, y_init)

@@ -1,17 +1,19 @@
 """Jitted wrapper assembling Pallas launches into stage A.
 
-``make_stage_a(plan, ...)`` returns a function ``fn(mutable) -> (B, N)``
-lanes matrix in exec-block order.  Two launch modes:
-
-* ``fused=True`` (default): ONE ``pallas_call`` covering every vload block
-  — the grid spans the whole vload section, window BlockSpecs are padded to
-  the section-wide max ``ls`` (scalar-prefetched ``window_ids`` repeat the
-  last valid window, so the extra DMAs are legal and lanes never select
-  them), and the shift-reduce ladder is deep enough for every member class
-  (extra steps are exact no-ops, DESIGN.md §3) — plus ONE batched XLA
-  segment for all gather-fallback blocks.  At most two launches per call.
-* ``fused=False``: the paper's one-``pallas_call``-per-pattern-class form
-  (§6.3 applies the rewrite only when the flags indicate a benefit).
+``make_stage_a(plan, ..., launches=...)`` returns a function
+``fn(mutable) -> (B, N)`` lanes matrix in exec-block order.  The launch
+list comes from the lowered information-code tree
+(:mod:`repro.core.ir`): the fused form is at most ONE ``pallas_call``
+covering every vload block (the grid spans the whole vload section,
+window BlockSpecs are padded to the section-wide max ``ls`` —
+scalar-prefetched ``window_ids`` repeat the last valid window, so the
+extra DMAs are legal and lanes never select them — and the shift-reduce
+ladder is deep enough for every member class; extra steps are exact
+no-ops, DESIGN.md §3) plus ONE batched XLA segment for all
+gather-fallback blocks, with per-block native-reduce flags carried on
+``Launch.full_mask``.  The un-fused form is the paper's
+one-``pallas_call``-per-pattern-class list (§6.3 applies the rewrite
+only when the flags indicate a benefit).
 """
 from __future__ import annotations
 
@@ -19,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
-from repro.core.plan import GATHER_FALLBACK, BlockPlan
+from repro.core import ir
+from repro.core.plan import BlockPlan
 from repro.kernels.unroll_spmv.kernel import class_stage_a
 
 
@@ -35,16 +38,17 @@ def _term_dtype(seed, mutable, elem_exec):
 
 
 def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
-                 fused: bool = True):
+                 launches: list[ir.Launch] | None = None):
     seed = plan.seed
-    classes = eng.fused_sections(plan) if fused else plan.classes
+    if launches is None:
+        launches = ir.lower(plan, backend="pallas").launches
     # per-launch static metadata, upcast to kernel-friendly int32 once
-    class_meta = []
-    for c in classes:
-        s = plan.class_slice(c)
-        mask = eng.section_full_mask(plan, c) if fused else None
-        class_meta.append(dict(
-            win=jnp.asarray(plan.window_ids[s][:, :max(c.ls_flag, 1)],
+    launch_meta = []
+    for launch in launches:
+        s = slice(launch.start, launch.stop)
+        mask = launch.full_mask
+        launch_meta.append(dict(
+            win=jnp.asarray(plan.window_ids[s][:, :max(launch.ls_flag, 1)],
                             jnp.int32),
             slot=jnp.asarray(plan.lane_slot[s], jnp.int32),
             off=jnp.asarray(plan.lane_offset[s], jnp.int32),
@@ -58,16 +62,16 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
                  for g in seed.gathered}
         out_dtype = _term_dtype(seed, mutable, elem_exec)
         parts = []
-        for c, cm in zip(classes, class_meta):
-            s = plan.class_slice(c)
+        for launch, cm in zip(launches, launch_meta):
+            s = slice(launch.start, launch.stop)
             elem_blocks = {e: elem_exec[e][s] for e in seed.elementwise}
-            if c.ls_flag == GATHER_FALLBACK and seed.gather_index is not None:
+            if launch.gather == ir.FALLBACK and seed.gather_index is not None:
                 # native gather path (XLA) + in-XLA segmented reduce
                 vals = {g: jnp.asarray(mutable[g])[cm["gidx"]]
                         for g in seed.gathered}
                 vals.update(elem_blocks)
                 term = seed.combine(vals)
-                red = eng.segmented_reduce(term, cm["seg"], c.op_flag,
+                red = eng.segmented_reduce(term, cm["seg"], launch.op_flag,
                                            seed.reduce)
                 if cm["full"] is not None:
                     native = eng.segmented_reduce(
@@ -78,8 +82,8 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
             parts.append(class_stage_a(
                 cm["win"], views, elem_blocks, cm["slot"], cm["off"],
                 cm["seg"], combine=seed.combine, gathered=seed.gathered,
-                elementwise=seed.elementwise, ls=max(c.ls_flag, 1),
-                op=c.op_flag, stream=c.stream, reduce=seed.reduce,
+                elementwise=seed.elementwise, ls=max(launch.ls_flag, 1),
+                op=launch.op_flag, stream=launch.stream, reduce=seed.reduce,
                 full_flags=cm["full"], out_dtype=out_dtype,
                 interpret=interpret))
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)

@@ -23,7 +23,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.configs.base import SHAPES

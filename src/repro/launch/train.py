@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import get_config
 from repro.launch import sharding as sh

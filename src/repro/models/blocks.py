@@ -16,7 +16,6 @@ from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models import mlp as MLP
 from repro.models import moe as MOE
-from repro.models import params as pr
 from repro.models import rwkv6 as R6
 
 

@@ -77,7 +77,6 @@ def embed_lookup_psum(table: jnp.ndarray, ids: jnp.ndarray, compute_dtype,
     psum the (B, S, D) result, which at decode is a few hundred KB.
     Applied when the token count is tiny (decode); training keeps the
     table all-gather (activations >> table there)."""
-    import functools
     from jax.sharding import PartitionSpec as P
     mesh = shd.mesh
     model_n = mesh.shape["model"]

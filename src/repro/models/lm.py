@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import attention as A
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models import params as pr

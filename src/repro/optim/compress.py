@@ -12,7 +12,6 @@ Off by default: the paper-faithful baseline exchanges f32/bf16 gradients.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

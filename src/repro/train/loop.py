@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -20,10 +20,10 @@ deterministic given a plan (pinned by tests).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core import engine as eng
 from repro.core import feature_table as ft
+from repro.core import ir
 from repro.core.plan import BlockPlan
 from repro.tune.space import Candidate
 
@@ -33,6 +33,7 @@ LAUNCH_US = 12.0          # per-launch dispatch + assembly overhead
 GATHER_NS = 4.0           # native dynamic gather, per lane
 WINDOW_NS = 2.0           # tile-load + lane-select path, per lane per window
 STREAM_NS = 1.0           # pure vload (stream) copy, per lane
+SLICE_NS = 1.5            # coalesced dense slice load + static permute
 LADDER_NS = 2.0           # one masked shift-reduce step, per lane
 HEAD_NS = 8.0             # stage-B head re-gather + unique-row scatter
 DENSE_NS = 6.0            # stage-B dense scatter, per lane (incl. pads)
@@ -62,6 +63,7 @@ class PlanFeatures:
     heads_per_nnz: float       # RMW writes after reduction merge / nnz
     heads_per_lane: float      # heads / lanes_total (write density)
     nnz_per_row: float         # nnz / out_len (skew summary)
+    coalesced_frac: float = 0.0  # nnz reachable by ir.coalesce_gathers
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -89,7 +91,8 @@ def plan_features(plan: BlockPlan) -> PlanFeatures:
         mean_windows=mean_windows,
         heads_per_nnz=st.heads_total / max(st.nnz, 1),
         heads_per_lane=st.heads_total / max(lanes, 1),
-        nnz_per_row=st.nnz / max(plan.out_len, 1))
+        nnz_per_row=st.nnz / max(plan.out_len, 1),
+        coalesced_frac=ir.coalesce_stats(plan)["coalesced_fraction"])
 
 
 def _stage_a_ns_per_lane(c: Candidate, f: PlanFeatures) -> float:
@@ -102,6 +105,11 @@ def _stage_a_ns_per_lane(c: Candidate, f: PlanFeatures) -> float:
                   + f.stream_frac * STREAM_NS
                   + max(1.0 - f.fallback_frac - f.stream_frac, 0.0)
                   * (WINDOW_NS * max(f.mean_windows, 1.0)))
+    if c.coalesce and c.backend == "jax":
+        # the coalesced share of lanes trades its gather for a dense
+        # slice load (the pass is a no-op on the rest)
+        gather = ((1.0 - f.coalesced_frac) * gather
+                  + f.coalesced_frac * SLICE_NS)
     # exact per-group ladder depth in every mode (exec order groups by op);
     # FULL_REDUCE blocks pay the pairwise tree (~2 combines/lane on XLA).
     ladder = LADDER_NS * (f.mean_op_steps

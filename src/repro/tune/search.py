@@ -89,7 +89,7 @@ def _build_plan(seed, access, out_len, data_len, cand: Candidate,
 def _default_exec_factory(plan, cand: Candidate, static_data, elem_exec):
     return eng.make_executor(plan, static_data, backend=cand.backend,
                              fused=cand.fused, stage_b=cand.stage_b,
-                             elem_exec=elem_exec)
+                             elem_exec=elem_exec, coalesce=cand.coalesce)
 
 
 def _outputs_match(got, want) -> bool:

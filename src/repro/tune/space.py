@@ -45,6 +45,7 @@ class Candidate:
     stage_b: str = "gather"            # "gather" | "dense"
     lane_width: int = 128
     max_windows_replace: int | None = None
+    coalesce: bool = False             # ir.coalesce_gathers lowering pass
 
     @property
     def plan_key(self) -> tuple:
@@ -61,7 +62,9 @@ class Candidate:
         mode = "fused" if self.fused else "per_class"
         cut = ("" if self.max_windows_replace is None
                else f"/w{self.max_windows_replace}")
-        return f"{self.backend}/{mode}/{self.stage_b}/n{self.lane_width}{cut}"
+        co = "/co" if self.coalesce else ""
+        return (f"{self.backend}/{mode}/{self.stage_b}"
+                f"/n{self.lane_width}{cut}{co}")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -80,9 +83,14 @@ def default_platform() -> str:
 def canonicalize(c: Candidate) -> Candidate:
     """Collapse don't-care axes so the space holds no duplicate configs:
     the segsum backend has a single form (stage A+B are one segment
-    reduce), so ``fused``/``stage_b`` are fixed to their defaults."""
+    reduce), so ``fused``/``stage_b`` are fixed to their defaults; the
+    ``coalesce_gathers`` pass only lowers for the XLA emitter (segsum
+    folds stage A, Pallas keeps its window DMA path — DESIGN.md §8), so
+    ``coalesce`` is fixed off everywhere else."""
     if c.backend == "segsum":
-        return dataclasses.replace(c, fused=True, stage_b="gather")
+        c = dataclasses.replace(c, fused=True, stage_b="gather")
+    if c.backend != "jax" and c.coalesce:
+        c = dataclasses.replace(c, coalesce=False)
     return c
 
 
@@ -109,10 +117,10 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
     ``platform`` — the declarative product space filtered by
     :func:`is_valid` and deduplicated through :func:`canonicalize`.
 
-    The default axes give 5 candidates on CPU (4 jax forms + segsum) and
-    add the two Pallas forms on TPU; widening ``lane_widths`` /
-    ``window_cutoffs`` multiplies the *plan* axis, which the search
-    harness shares per :attr:`Candidate.plan_key`.
+    The default axes give 9 candidates on CPU (8 jax forms: fused x
+    stage_b x coalesce, + segsum) and add the two Pallas forms on TPU;
+    widening ``lane_widths`` / ``window_cutoffs`` multiplies the *plan*
+    axis, which the search harness shares per :attr:`Candidate.plan_key`.
     """
     platform = platform or default_platform()
     out: list[Candidate] = []
@@ -122,16 +130,19 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
             for backend in backends:
                 for fused in (True, False):
                     for stage_b in _STAGE_BS:
-                        c = Candidate(backend=backend, fused=fused,
-                                      stage_b=stage_b, lane_width=n,
-                                      max_windows_replace=cut)
-                        if not is_valid(c, seed, platform, allow_interpret):
-                            continue
-                        c = canonicalize(c)
-                        if c in seen:
-                            continue
-                        seen.add(c)
-                        out.append(c)
+                        for coalesce in (False, True):
+                            c = Candidate(backend=backend, fused=fused,
+                                          stage_b=stage_b, lane_width=n,
+                                          max_windows_replace=cut,
+                                          coalesce=coalesce)
+                            if not is_valid(c, seed, platform,
+                                            allow_interpret):
+                                continue
+                            c = canonicalize(c)
+                            if c in seen:
+                                continue
+                            seen.add(c)
+                            out.append(c)
     return out
 
 

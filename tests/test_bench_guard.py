@@ -1,0 +1,72 @@
+"""Multi-pair bench-regression guard (benchmarks.check_regression).
+
+One invocation now guards any number of (baseline, candidate) pairs with
+a single summary and exit code — these tests pin the aggregation rules:
+a regression in ANY pair fails, growth-only rows never fail, and the
+single-pair ``check`` API remains the degenerate case.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_regression import check, check_many
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump({"timings": rows}, f)
+    return str(path)
+
+
+def _spmv_row(dataset, mode, speedup):
+    return {"bench": "spmv_exec", "dataset": dataset, "mode": mode,
+            "backend": "jax", "lane_width": 8,
+            "speedup_vs_per_class": speedup}
+
+
+def test_multi_pair_all_pass(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    b = _write(tmp_path / "b.json", [_spmv_row("d", "fused", 1.45)])
+    g = _write(tmp_path / "g.json",
+               [{"bench": "graph", "dataset": "powerlaw", "app": "bfs",
+                 "backend": "jax", "driver": "resident",
+                 "run_speedup_vs_host": 1.4}])
+    assert check_many([(a, b), (g, g)]) == 0
+    out = capsys.readouterr().out
+    assert "2 pair(s)" in out and "none below" in out
+
+
+def test_multi_pair_any_regression_fails(tmp_path):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    ok = _write(tmp_path / "ok.json", [_spmv_row("d", "fused", 1.5)])
+    bad = _write(tmp_path / "bad.json", [_spmv_row("d", "fused", 1.0)])
+    assert check_many([(a, ok), (a, bad)]) == 1
+    assert check_many([(a, ok), (a, ok)]) == 0
+
+
+def test_growth_rows_never_fail(tmp_path):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    b = _write(tmp_path / "b.json", [_spmv_row("d", "fused", 1.5),
+                                     _spmv_row("new_ds", "fused", 0.5)])
+    assert check(a, b) == 0          # single-pair API still works
+
+
+def test_resident_floor_not_vacuous(tmp_path):
+    """Resident rows vanishing from a file that used to have them must
+    fail the floor, not pass it vacuously."""
+    g = _write(tmp_path / "g.json",
+               [{"bench": "graph", "dataset": "powerlaw", "app": "bfs",
+                 "backend": "jax", "driver": "resident",
+                 "run_speedup_vs_host": 1.4}])
+    empty = _write(tmp_path / "empty.json", [])
+    assert check(g, empty) == 1
+
+
+@pytest.mark.parametrize("floor_ok", [True, False])
+def test_resident_floor(tmp_path, floor_ok):
+    v = 1.2 if floor_ok else 0.8
+    g = _write(tmp_path / "g.json",
+               [{"bench": "graph", "dataset": "powerlaw", "app": "bfs",
+                 "backend": "jax", "driver": "resident",
+                 "run_speedup_vs_host": v}])
+    assert check(g, g) == (0 if floor_ok else 1)

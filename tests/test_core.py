@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import feature_table as ft
 from repro.core.plan import build_plan, CostModel, GATHER_FALLBACK
-from repro.core.seed import spmv_seed, pagerank_seed, reference_execute
+from repro.core.seed import reference_execute
 from repro.core import engine as eng
 from repro.core.apps import SpMV, PageRank, pagerank_reference
 from repro.sparse import generators as G

@@ -72,13 +72,17 @@ def test_spmm_plan_cache_dir_and_backend_validation(tmp_path):
     np.testing.assert_array_equal(np.asarray(sp1.matmat(bmat)),
                                   np.asarray(sp2.matmat(bmat)))
     with pytest.raises(ValueError, match="backend"):
-        SpMM.from_coo(*args, backend="segsum")
+        SpMM.from_coo(*args, backend="pallas")   # scalar-lane emitter only
+    with pytest.raises(ValueError, match="backend"):
+        SpMM.from_coo(*args, backend="bogus")
 
 
 def test_spmm_auto_selects_and_matches_oracle(tmp_path):
     m = G.power_law(512, 6)
     sp = SpMM.from_coo(np.asarray(m.rows), np.asarray(m.cols),
                        np.asarray(m.vals), m.shape, backend="auto",
+                       lane_width=32,     # non-default: the candidate
+                       # space must follow the caller's lane width
                        tune_cache_dir=str(tmp_path))
     assert sp.tuning is not None and sp.tuning.num_measured > 0
     bmat = np.random.default_rng(1).standard_normal(
@@ -91,15 +95,132 @@ def test_spmm_auto_selects_and_matches_oracle(tmp_path):
     np.testing.assert_allclose(y, yref, rtol=2e-4, atol=2e-4)
 
 
-def test_spmm_segmented_reduce_2d_rejects_non_add():
-    """Until semiring SpMM lands, a non-add reduce must fail loudly, not
-    silently accumulate with +."""
-    from repro.core.spmm import _segmented_reduce_2d
-    term = jnp.ones((2, 4, 3), jnp.float32)
-    seg = jnp.zeros((2, 4), jnp.int32)
-    for reduce in ("min", "max", "mul"):
-        with pytest.raises(ValueError, match="only reduce='add'"):
-            _segmented_reduce_2d(term, seg, 1, reduce=reduce)
+def test_spmm_parallel_path_is_gone():
+    """The unification's deletion criterion: SpMM has no private executor
+    any more — ``_make_run`` / ``_segmented_reduce_2d`` are gone and the
+    instance's ``_run`` IS an ``engine.make_executor`` product (it carries
+    the ``sweep_body`` every shared executor exposes)."""
+    from repro.core import spmm as spmm_mod
+    assert not hasattr(spmm_mod, "_make_run")
+    assert not hasattr(spmm_mod, "_segmented_reduce_2d")
+    m = G.banded(256, 3)
+    sp = SpMM.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                       np.asarray(m.vals), m.shape, lane_width=32)
+    assert hasattr(sp._run, "sweep_body")
+
+
+def test_spmm_d1_bitwise_equals_spmv():
+    """Rank-polymorphism pin (DESIGN.md §8): SpMM with a single trailing
+    lane is the SAME program as SpMV — bitwise, per backend and mode."""
+    m = G.power_law(512, 6)
+    x = np.random.default_rng(7).standard_normal(m.shape[1]).astype(
+        np.float32)
+    args = (np.asarray(m.rows), np.asarray(m.cols), np.asarray(m.vals),
+            m.shape)
+    for backend in ("jax", "segsum"):
+        for fused in (False, True):
+            spv = SpMV.from_coo(*args, lane_width=32, backend=backend,
+                                fused=fused)
+            spm = SpMM.from_coo(*args, lane_width=32, backend=backend,
+                                fused=fused)
+            y1 = np.asarray(spv.matvec(jnp.asarray(x)))
+            y2 = np.asarray(spm.matmat(jnp.asarray(x[:, None])))[:, 0]
+            np.testing.assert_array_equal(y1, y2,
+                                          err_msg=f"{backend}/fused={fused}")
+
+
+def test_spmm_matches_prerefactor_executor():
+    """Pin against a frozen copy of the pre-refactor SpMM path (the
+    deleted ``_make_run``/``_segmented_reduce_2d``): int32 results are
+    EXACT (integer adds are associative, so the only divergence channel —
+    reduction order — cannot show), float32 agrees to roundoff (the old
+    path used an order-unpinned ``jnp.sum`` for FULL_REDUCE blocks and a
+    duplicate-index scatter-add; the shared executor uses the pairwise
+    tree + unique-row scatter that every bitwise guarantee relies on)."""
+    import jax
+    from repro.core.plan import CostModel, build_plan
+    from repro.core import feature_table as ft
+    from repro.core.seed import spmv_seed
+
+    def frozen_prerefactor_run(plan, val_exec, fused):
+        gidx = jnp.asarray(plan.gather_idx, jnp.int32)
+        head_pos = jnp.asarray(plan.head_pos)
+        head_rows = jnp.asarray(plan.head_rows)
+        seg_ids = jnp.asarray(plan.seg_ids)
+        launch_list = eng.fused_xla_classes(plan) if fused \
+            else plan.classes
+        classes = [(c.op_flag, c.start, c.stop) for c in launch_list]
+
+        def reduce_2d(term, seg, op_flag):
+            if op_flag == ft.FULL_REDUCE:
+                total = jnp.sum(term, axis=1)
+                return term.at[:, 0, :].set(total)
+            for k in range(op_flag):
+                sft = 1 << k
+                shifted = jnp.pad(term[:, sft:], ((0, 0), (0, sft), (0, 0)))
+                seg_shift = jnp.pad(seg[:, sft:], ((0, 0), (0, sft)),
+                                    constant_values=-(2 ** 30))
+                term = jnp.where((seg == seg_shift)[:, :, None],
+                                 term + shifted, term)
+            return term
+
+        @jax.jit
+        def run(bmat, y_init):
+            d = bmat.shape[1]
+            parts = []
+            for op_flag, s0, s1 in classes:
+                rowsv = bmat[gidx[s0:s1]]
+                term = val_exec[s0:s1][:, :, None].astype(bmat.dtype) * rowsv
+                parts.append(reduce_2d(term, seg_ids[s0:s1], op_flag))
+            lanes = jnp.concatenate(parts, 0)
+            hv = lanes.reshape(-1, d)[head_pos]
+            return y_init.at[head_rows].add(hv.astype(y_init.dtype))
+        return run
+
+    rng = np.random.default_rng(11)
+    for dtype, assert_fn in ((np.int32, np.testing.assert_array_equal),
+                             (np.float32,
+                              lambda a, b, **kw: np.testing.assert_allclose(
+                                  a, b, rtol=1e-5, atol=1e-5, **kw))):
+        m = G.power_law(512, 6)
+        if np.issubdtype(dtype, np.integer):
+            vals = rng.integers(-9, 9, m.nnz).astype(dtype)
+            bmat = rng.integers(-9, 9, (m.shape[1], 8)).astype(dtype)
+        else:
+            vals = np.asarray(m.vals, dtype)
+            bmat = rng.standard_normal((m.shape[1], 8)).astype(dtype)
+        plan = build_plan(spmv_seed(),
+                          {"row": np.asarray(m.rows),
+                           "col": np.asarray(m.cols)},
+                          m.shape[0], m.shape[1], CostModel(lane_width=32))
+        val_exec = eng.reorder_elementwise(plan, vals)
+        y0 = jnp.zeros((m.shape[0], 8), dtype)
+        for fused in (False, True):
+            old = frozen_prerefactor_run(plan, val_exec, fused)
+            y_old = np.asarray(old(jnp.asarray(bmat), y0))
+            sp = SpMM.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                               vals, m.shape, lane_width=32, fused=fused)
+            y_new = np.asarray(sp.matmat(jnp.asarray(bmat), y0))
+            assert_fn(y_old, y_new,
+                      err_msg=f"dtype={dtype} fused={fused}")
+
+
+def test_spmm_coalesce_bitwise_and_reaches_banded():
+    """The gather-coalescing pass on a 2-D lane: bitwise-identical output,
+    with full nnz reach on the banded family."""
+    from repro.core import ir
+    m = G.banded(512, 5)
+    args = (np.asarray(m.rows), np.asarray(m.cols), np.asarray(m.vals),
+            m.shape)
+    bmat = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (m.shape[1], 8)).astype(np.float32))
+    ys = []
+    for coalesce in (False, True):
+        sp = SpMM.from_coo(*args, lane_width=32, coalesce=coalesce)
+        ys.append(np.asarray(sp.matmat(bmat)))
+    np.testing.assert_array_equal(ys[0], ys[1])
+    sp = SpMM.from_coo(*args, lane_width=32)
+    assert ir.coalesce_stats(sp.plan)["coalesced_fraction"] > 0
 
 
 def test_plan_save_load_roundtrip(tmp_path):

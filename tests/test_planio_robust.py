@@ -7,7 +7,7 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core.plan import CostModel, build_plan
+from repro.core.plan import CostModel
 from repro.core.seed import spmv_seed
 from repro.sparse import generators as G
 

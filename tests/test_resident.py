@@ -7,7 +7,6 @@ and the same one-plan-per-graph amortization — across every app, backend,
 and launch-list mode.  Donation must never corrupt results, even when the
 caller retains a reference to the donated buffer.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

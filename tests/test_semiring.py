@@ -85,6 +85,60 @@ def test_reduce_backend_dtype_matrix(backend, reduce, dtype):
                 _assert_matches(y, yref, reduce, dtype)
 
 
+_NP_REDUCE_AT = {"add": np.add, "mul": np.multiply,
+                 "max": np.maximum, "min": np.minimum}
+
+
+@pytest.mark.parametrize("reduce", ["min", "max", "mul", "add"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("fused", [False, True])
+def test_spmm_semiring_matrix(reduce, dtype, fused):
+    """SpMM through the shared rank-polymorphic executor gets the FULL
+    semiring reduce set (the deleted 2-D path was add-only and raised for
+    everything else): min/max/prod x dtype x fused/per_class vs a numpy
+    ``ufunc.at`` oracle — exact for int32 and the order-invariant float
+    min/max, allclose for float add/mul."""
+    from repro.core.spmm import SpMM
+    rng = np.random.default_rng(0)
+    nnz, out_len, data_len, d = 300, 24, 60, 5
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        vals = rng.integers(-4, 5, nnz).astype(dtype)
+        bmat = rng.integers(-4, 5, (data_len, d)).astype(dtype)
+    else:
+        vals = rng.standard_normal(nnz).astype(dtype)
+        bmat = rng.standard_normal((data_len, d)).astype(dtype)
+    sp = SpMM.from_coo(rows, cols, vals, (out_len, data_len),
+                       lane_width=8, fused=fused, reduce=reduce)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        y = np.asarray(sp.matmat(jnp.asarray(bmat)))
+    yref = np.full((out_len, d), reduce_identity_for(reduce, dtype), dtype)
+    _NP_REDUCE_AT[reduce].at(yref, rows, vals[:, None] * bmat[cols])
+    _assert_matches(y, yref, reduce, dtype)
+
+
+@pytest.mark.parametrize("reduce", ["min", "max", "mul"])
+def test_spmm_semiring_segsum_backend(reduce):
+    """The segsum backend runs the non-add SpMM semirings too (rank-poly
+    ``jax.ops.segment_*`` over the trailing lane axis)."""
+    from repro.core.spmm import SpMM
+    rng = np.random.default_rng(4)
+    nnz, out_len, data_len, d = 220, 20, 50, 4
+    rows = rng.integers(0, out_len, nnz)
+    cols = rng.integers(0, data_len, nnz)
+    vals = rng.integers(-4, 5, nnz).astype(np.int32)
+    bmat = rng.integers(-4, 5, (data_len, d)).astype(np.int32)
+    sp = SpMM.from_coo(rows, cols, vals, (out_len, data_len),
+                       lane_width=8, backend="segsum", reduce=reduce)
+    y = np.asarray(sp.matmat(jnp.asarray(bmat)))
+    yref = np.full((out_len, d), reduce_identity_for(reduce, np.int32),
+                   np.int32)
+    _NP_REDUCE_AT[reduce].at(yref, rows, vals[:, None] * bmat[cols])
+    np.testing.assert_array_equal(y, yref)
+
+
 def test_int32_min_dense_stage_b_exact():
     """The first-satellite repro: int32 min-reduce SpMV with
     ``stage_b="dense"`` must match the oracle EXACTLY (the float ``-inf``

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.checkpoint import checkpoint as ck
 from repro.data.pipeline import synth_batch
-from repro.models import lm, moe as MOE, params as pr
+from repro.models import moe as MOE, params as pr
 from repro.models import mamba2 as M2
 from repro.optim import adamw
 from repro.train.loop import TrainConfig, Trainer

@@ -54,8 +54,10 @@ def test_space_validity_rules():
     # segsum is canonicalized to a single form (fused/stage_b don't apply)
     segsum = [c for c in cpu if c.backend == "segsum"]
     assert len(segsum) == 1 and segsum[0].stage_b == "gather"
-    # jax exposes the full fused x stage_b grid
-    assert sum(c.backend == "jax" for c in cpu) == 4
+    # jax exposes the full fused x stage_b x coalesce grid
+    assert sum(c.backend == "jax" for c in cpu) == 8
+    assert sum(c.coalesce for c in cpu) == 4, \
+        "coalesce is a jax-only axis (canonicalized off elsewhere)"
     assert len(set(cpu)) == len(cpu)
 
     assert any(c.backend == "pallas" for c in
