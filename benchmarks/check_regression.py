@@ -30,8 +30,16 @@ show ``run_speedup_vs_host`` of at least ``--min-resident-speedup``
 driver on the workload it exists for.  The floor fails loudly (never
 vacuously) if those rows disappear from a file that used to have them.
 
-Rows present on only one side (new datasets, new modes) are reported but
-never fail the guard — growth must not be punished.
+Rows present on only one side are handled asymmetrically: candidate-only
+rows (new datasets, new modes) are reported but never fail the guard —
+growth must not be punished — while BASELINE rows missing from the
+candidate print a per-row ``MISSING_IN_NEW`` diagnostic naming exactly
+which row vanished.  Missing rows warn by default (``--missing warn``);
+``--missing fail`` turns them into their own failure with the distinct
+exit code 2, so CI can tell "a speedup regressed" (exit 1) from "a bench
+silently stopped producing rows" (exit 2).  An unreadable or malformed
+JSON file is exit code 3 with a one-line message naming the file — never
+a traceback.
 """
 from __future__ import annotations
 
@@ -42,6 +50,36 @@ import sys
 METRICS = ("speedup_vs_per_class", "run_speedup_vs_host")
 _KEYS = ("bench", "dataset", "mode", "backend", "app", "driver",
          "lane_width")
+
+# distinct exit codes: CI logs say WHAT failed without reading the table
+EXIT_OK = 0
+EXIT_REGRESSION = 1         # a matched row's speedup ratio fell
+EXIT_MISSING = 2            # --missing fail and baseline rows vanished
+EXIT_BAD_FILE = 3           # a JSON file is unreadable or malformed
+
+
+class BadFileError(Exception):
+    """A baseline/candidate file that cannot be compared at all."""
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except OSError as e:
+        raise BadFileError(
+            f"regression_guard: cannot read {path}: {e.strerror or e}"
+        ) from e
+    except ValueError as e:
+        raise BadFileError(
+            f"regression_guard: {path} is not valid JSON ({e}); was the "
+            "benchmark run interrupted?") from e
+    if not isinstance(payload, dict):
+        raise BadFileError(
+            f"regression_guard: {path} is valid JSON but not a benchmark "
+            f"payload (top level is {type(payload).__name__}, expected an "
+            "object with a 'timings' list)")
+    return payload
 
 
 def _index(payload: dict, metric: str) -> dict:
@@ -59,11 +97,18 @@ def _fmt(key: tuple) -> str:
 
 
 def _check_metric(metric: str, old: dict, new: dict,
-                  min_ratio: float) -> list:
+                  min_ratio: float) -> tuple[list, list]:
+    """Returns ``(failures, missing)`` — missing = baseline rows the
+    candidate no longer produces, each already printed as a per-row
+    ``MISSING_IN_NEW`` line naming the row."""
     failures = []
+    missing = []
     for key in sorted(old):
         if key not in new:
-            print(f"only_in_old,{metric},{_fmt(key)},{old[key]}")
+            print(f"MISSING_IN_NEW,{metric},{_fmt(key)},old={old[key]} "
+                  "(baseline row absent from candidate — dataset/mode "
+                  "renamed, or the bench stopped emitting it?)")
+            missing.append((metric, key, old[key]))
             continue
         ratio = new[key] / old[key] if old[key] else 1.0
         status = "OK" if ratio >= min_ratio else "REGRESSION"
@@ -73,7 +118,7 @@ def _check_metric(metric: str, old: dict, new: dict,
             failures.append((metric, key, old[key], new[key], ratio))
     for key in sorted(set(new) - set(old)):
         print(f"only_in_new,{metric},{_fmt(key)},{new[key]}")
-    return failures
+    return failures, missing
 
 
 def _check_resident_floor(new_payload: dict, floor: float
@@ -108,14 +153,13 @@ def _check_resident_floor(new_payload: dict, floor: float
 
 
 def _check_pair(old_path: str, new_path: str, min_ratio: float,
-                min_resident_speedup: float) -> tuple[list, int, int]:
+                min_resident_speedup: float) -> tuple[list, list, int, int]:
     """One (baseline, candidate) comparison.  Returns
-    ``(failures, rows_checked, floor_rows_checked)``."""
-    with open(old_path) as f:
-        old_payload = json.load(f)
-    with open(new_path) as f:
-        new_payload = json.load(f)
+    ``(failures, missing, rows_checked, floor_rows_checked)``."""
+    old_payload = _load(old_path)
+    new_payload = _load(new_path)
     failures = []
+    missing = []
     checked = 0
     for metric in METRICS:
         old = _index(old_payload, metric)
@@ -125,7 +169,9 @@ def _check_pair(old_path: str, new_path: str, min_ratio: float,
                   "nothing to compare")
             continue
         checked += len(old)
-        failures += _check_metric(metric, old, new, min_ratio)
+        f, m = _check_metric(metric, old, new, min_ratio)
+        failures += f
+        missing += m
     floor_failures, floor_checked = _check_resident_floor(
         new_payload, min_resident_speedup)
     failures += floor_failures
@@ -134,26 +180,40 @@ def _check_pair(old_path: str, new_path: str, min_ratio: float,
         # vanishing from the new file must not pass the floor vacuously
         failures.append(("resident_floor", "powerlaw/* (rows missing)",
                          min_resident_speedup, 0.0, 0.0))
-    return failures, checked, floor_checked
+    return failures, missing, checked, floor_checked
 
 
 def check_many(pairs: list[tuple[str, str]], min_ratio: float = 0.9,
-               min_resident_speedup: float = 1.0) -> int:
+               min_resident_speedup: float = 1.0,
+               missing: str = "warn") -> int:
     """Guard every ``(baseline, candidate)`` pair; print one summary
-    table; return a single exit code (non-zero if ANY pair regressed)."""
-    failures, checked, floor_checked = [], 0, 0
+    table; return a single exit code (non-zero if ANY pair regressed).
+
+    ``missing="warn"`` (default) reports baseline rows absent from the
+    candidate without failing; ``missing="fail"`` returns the distinct
+    ``EXIT_MISSING`` code for them (a real regression still dominates
+    with ``EXIT_REGRESSION``).  An unreadable/malformed file is
+    ``EXIT_BAD_FILE`` immediately."""
+    if missing not in ("warn", "fail"):
+        raise ValueError(f"missing={missing!r}; expected 'warn' or 'fail'")
+    failures, missing_rows, checked, floor_checked = [], [], 0, 0
     summary = []
     for old_path, new_path in pairs:
         print(f"== {old_path} -> {new_path} ==")
-        f, c, fc = _check_pair(old_path, new_path, min_ratio,
-                               min_resident_speedup)
+        try:
+            f, m, c, fc = _check_pair(old_path, new_path, min_ratio,
+                                      min_resident_speedup)
+        except BadFileError as e:
+            print(str(e), file=sys.stderr)
+            return EXIT_BAD_FILE
         failures += f
+        missing_rows += m
         checked += c
         floor_checked += fc
-        summary.append((old_path, new_path, c, fc, len(f)))
-    print("\npair,rows_checked,floor_rows,failures")
-    for old_path, new_path, c, fc, nf in summary:
-        print(f"{old_path}->{new_path},{c},{fc},{nf}")
+        summary.append((old_path, new_path, c, fc, len(f), len(m)))
+    print("\npair,rows_checked,floor_rows,failures,missing")
+    for old_path, new_path, c, fc, nf, nm in summary:
+        print(f"{old_path}->{new_path},{c},{fc},{nf},{nm}")
     if failures:
         print(f"\nregression_guard: {len(failures)} row(s) failed:",
               file=sys.stderr)
@@ -161,20 +221,32 @@ def check_many(pairs: list[tuple[str, str]], min_ratio: float = 0.9,
             name = _fmt(key) if isinstance(key, tuple) else key
             print(f"  [{metric}] {name}: {o:.3f} -> {n:.3f} ({r:.2f}x)",
                   file=sys.stderr)
-        return 1
+        return EXIT_REGRESSION
+    if missing_rows and missing == "fail":
+        print(f"\nregression_guard: {len(missing_rows)} baseline row(s) "
+              "missing from the candidate (--missing fail):",
+              file=sys.stderr)
+        for metric, key, o in missing_rows:
+            print(f"  [{metric}] {_fmt(key)}: baseline {o:.3f}, "
+                  "no candidate row", file=sys.stderr)
+        return EXIT_MISSING
     floor_note = (f" (resident floor {min_resident_speedup:.2f}x held on "
                   f"{floor_checked} powerlaw row(s))" if floor_checked
                   else "")
+    missing_note = (f"; {len(missing_rows)} baseline row(s) missing "
+                    "(warned, not failed)" if missing_rows else "")
     print(f"regression_guard: {checked} row(s) checked across "
-          f"{len(pairs)} pair(s), none below {min_ratio:.2f}x{floor_note}")
-    return 0
+          f"{len(pairs)} pair(s), none below {min_ratio:.2f}x{floor_note}"
+          f"{missing_note}")
+    return EXIT_OK
 
 
 def check(old_path: str, new_path: str, min_ratio: float = 0.9,
-          min_resident_speedup: float = 1.0) -> int:
+          min_resident_speedup: float = 1.0,
+          missing: str = "warn") -> int:
     """Single-pair form (kept for callers/tests of the original API)."""
     return check_many([(old_path, new_path)], min_ratio,
-                      min_resident_speedup)
+                      min_resident_speedup, missing=missing)
 
 
 def main() -> None:
@@ -189,12 +261,17 @@ def main() -> None:
                     help="fail when a NEW powerlaw resident row's "
                          "run_speedup_vs_host falls below this "
                          "(default 1.0)")
+    ap.add_argument("--missing", choices=("warn", "fail"), default="warn",
+                    help="baseline rows absent from the candidate: "
+                         "'warn' (default) reports them, 'fail' exits "
+                         f"with code {EXIT_MISSING}")
     args = ap.parse_args()
     if len(args.files) < 2 or len(args.files) % 2:
         ap.error("expected an even number of files: OLD NEW [OLD NEW ...]")
     pairs = list(zip(args.files[0::2], args.files[1::2]))
     sys.exit(check_many(pairs, args.min_ratio,
-                        args.min_resident_speedup))
+                        args.min_resident_speedup,
+                        missing=args.missing))
 
 
 if __name__ == "__main__":

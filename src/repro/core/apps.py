@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import validate as validation
 from repro.core.graphs import check_auto_kwargs
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import pagerank_seed, spmv_seed
@@ -47,6 +48,8 @@ class SpMV:
     _run: object
     dtype: np.dtype
     tuning: object | None = None   # TuningResult when built via backend="auto"
+    validation: object | None = None    # ValidationReport from from_coo
+    degradations: tuple = ()            # DegradationEvents from the build
     # cached zero y_init per dtype: repeated matvecs share one device
     # constant instead of allocating a fresh jnp.zeros per call
     _y0: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -61,44 +64,73 @@ class SpMV:
                  coalesce: bool = False,
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
-                 tune_cache_dir: str | None = None) -> "SpMV":
+                 tune_cache_dir: str | None = None,
+                 validate: str = "strict") -> "SpMV":
         """``backend="auto"`` (or ``tune=True``) selects the execution
         variant per matrix via :mod:`repro.tune` — measured on this
         device, cached in ``tune_cache_dir`` so warm processes skip the
         measurements; the decision is recorded in ``.tuning``.
         ``coalesce=True`` opts in to the gather-coalescing lowering pass
-        (DESIGN.md §8); under ``backend="auto"`` it is a tuned axis."""
+        (DESIGN.md §8); under ``backend="auto"`` it is a tuned axis.
+        ``validate`` is the ingestion policy (DESIGN.md §9): ``"strict"``
+        (default) raises :class:`~repro.core.validate.InputError` on
+        out-of-range indices or non-finite values, ``"repair"`` drops or
+        combines them into a canonical matrix (report on
+        ``.validation``), ``"off"`` skips the checks."""
         seed = spmv_seed()
+        rows, cols, vals, vreport = validation.validate_coo(
+            rows, cols, np.asarray(vals), shape, policy=validate)
         access = {"row": rows, "col": cols}
-        vals = np.asarray(vals)
-        if backend == "auto" or tune:
-            check_auto_kwargs("SpMV.from_coo", backend=backend, fused=fused,
-                              stage_b=stage_b, cost=cost, coalesce=coalesce)
-            from repro.tune import autotune
-            dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
-                else np.float32
-            x_ex = jnp.asarray(np.random.default_rng(0).standard_normal(
-                shape[1]).astype(dt))
-            plan, run, result = autotune(
-                seed, access, shape[0], shape[1], {"value": vals},
-                {"x": x_ex}, jnp.zeros(shape[0], dt),
-                lane_widths=(lane_width,),
-                tune_cache_dir=tune_cache_dir,
-                plan_cache_dir=plan_cache_dir)
-            return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype,
-                       tuning=result)
-        cost = cost or CostModel(lane_width=lane_width)
-        plan = _plan(seed, access, shape[0], shape[1], cost, plan_cache_dir)
-        run = eng.make_executor(plan, {"value": vals}, backend=backend,
-                                fused=fused, stage_b=stage_b,
-                                coalesce=coalesce)
-        return cls(plan=plan, shape=shape, _run=run, dtype=vals.dtype)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                check_auto_kwargs("SpMV.from_coo", backend=backend,
+                                  fused=fused, stage_b=stage_b, cost=cost,
+                                  coalesce=coalesce)
+                from repro.tune import autotune
+                dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
+                    else np.float32
+                x_ex = jnp.asarray(np.random.default_rng(0).standard_normal(
+                    shape[1]).astype(dt))
+                plan, run, result = autotune(
+                    seed, access, shape[0], shape[1], {"value": vals},
+                    {"x": x_ex}, jnp.zeros(shape[0], dt),
+                    lane_widths=(lane_width,),
+                    tune_cache_dir=tune_cache_dir,
+                    plan_cache_dir=plan_cache_dir)
+                app = cls(plan=plan, shape=shape, _run=run,
+                          dtype=vals.dtype, tuning=result)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = _plan(seed, access, shape[0], shape[1], cost,
+                             plan_cache_dir)
+                run = eng.make_executor(plan, {"value": vals},
+                                        backend=backend, fused=fused,
+                                        stage_b=stage_b, coalesce=coalesce)
+                app = cls(plan=plan, shape=shape, _run=run,
+                          dtype=vals.dtype)
+        app.validation = vreport
+        app.degradations = tuple(events)
+        return app
 
     @classmethod
     def from_csr(cls, indptr: np.ndarray, indices: np.ndarray,
-                 vals: np.ndarray, shape: tuple[int, int], **kw) -> "SpMV":
+                 vals: np.ndarray, shape: tuple[int, int],
+                 validate: str = "strict", **kw) -> "SpMV":
+        """CSR ingestion.  The row partition is validated BEFORE the
+        ``np.repeat`` expansion: a non-monotone or wrong-length
+        ``indptr`` used to produce garbage ``rows`` silently and fail
+        far downstream (or not at all) — it now raises a structured
+        :class:`~repro.core.validate.InputError` under any policy but
+        ``"off"``.  Entry-level defects follow ``validate`` exactly as
+        :meth:`from_coo` does."""
+        indptr, indices, vals, vreport = validation.validate_csr(
+            indptr, indices, vals, shape, policy=validate)
         rows = np.repeat(np.arange(shape[0]), np.diff(indptr))
-        return cls.from_coo(rows, indices, vals, shape, **kw)
+        # entries were already validated/repaired above — do not repeat
+        # (or re-repair) the work in from_coo
+        app = cls.from_coo(rows, indices, vals, shape, validate="off", **kw)
+        app.validation = vreport
+        return app
 
     def matvec(self, x: jnp.ndarray, y_init: jnp.ndarray | None = None
                ) -> jnp.ndarray:
@@ -121,6 +153,8 @@ class PageRank:
     _run: object
     tuning: object | None = None   # TuningResult when built via backend="auto"
     driver: str = "resident"
+    validation: object | None = None    # ValidationReport from from_edges
+    degradations: tuple = ()            # DegradationEvents from the build
     # cached per-dtype zero out_init + compiled driver programs
     _zero: dict = dataclasses.field(default_factory=dict, repr=False)
     _progs: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -134,35 +168,41 @@ class PageRank:
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
-                   driver: str = "resident") -> "PageRank":
+                   driver: str = "resident",
+                   validate: str = "strict") -> "PageRank":
+        src, dst, _, vreport = validation.validate_edges(
+            src, dst, num_nodes, policy=validate)
         seed = pagerank_seed()
         access = {"n2": dst, "n1": src}
         deg = np.bincount(src, minlength=num_nodes).astype(np.float64)
         inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
         inv_j = jnp.asarray(inv, jnp.float32)
         tuning = None
-        if backend == "auto" or tune:
-            check_auto_kwargs("PageRank.from_edges", backend=backend,
-                              fused=fused, cost=cost)
-            from repro.tune import autotune
-            rank_ex = jnp.full((num_nodes,), 1.0 / max(num_nodes, 1),
-                               jnp.float32)
-            plan, run, tuning = autotune(
-                seed, access, num_nodes, num_nodes, {},
-                {"rank": rank_ex, "inv_nneighbor": inv_j},
-                jnp.zeros(num_nodes, jnp.float32),
-                lane_widths=(lane_width,),
-                tune_cache_dir=tune_cache_dir,
-                plan_cache_dir=plan_cache_dir)
-        else:
-            cost = cost or CostModel(lane_width=lane_width)
-            plan = _plan(seed, access, num_nodes, num_nodes, cost,
-                         plan_cache_dir)
-            run = eng.make_executor(plan, {}, backend=backend, fused=fused)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                check_auto_kwargs("PageRank.from_edges", backend=backend,
+                                  fused=fused, cost=cost)
+                from repro.tune import autotune
+                rank_ex = jnp.full((num_nodes,), 1.0 / max(num_nodes, 1),
+                                   jnp.float32)
+                plan, run, tuning = autotune(
+                    seed, access, num_nodes, num_nodes, {},
+                    {"rank": rank_ex, "inv_nneighbor": inv_j},
+                    jnp.zeros(num_nodes, jnp.float32),
+                    lane_widths=(lane_width,),
+                    tune_cache_dir=tune_cache_dir,
+                    plan_cache_dir=plan_cache_dir)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = _plan(seed, access, num_nodes, num_nodes, cost,
+                             plan_cache_dir)
+                run = eng.make_executor(plan, {}, backend=backend,
+                                        fused=fused)
         return cls(plan=plan, num_nodes=num_nodes,
                    inv_deg=inv_j,
                    dangling=jnp.asarray(deg == 0),
-                   damping=damping, _run=run, tuning=tuning, driver=driver)
+                   damping=damping, _run=run, tuning=tuning, driver=driver,
+                   validation=vreport, degradations=tuple(events))
 
     def _zero_init(self, dtype) -> jnp.ndarray:
         key = np.dtype(dtype).str

@@ -192,6 +192,30 @@ def tree_sum(x: jnp.ndarray) -> jnp.ndarray:
     return _halving_tree(x.reshape(1, -1), jnp.add, 0)[0, 0]
 
 
+def state_healthy(state: jnp.ndarray, reduce: str = "add") -> jnp.ndarray:
+    """Device-side scalar bool: is a fixpoint state still numerically
+    healthy for its semiring? (DESIGN.md §9)
+
+    A NaN-poisoned state can never satisfy an exact-equality convergence
+    check (NaN != NaN), so without this predicate a resident
+    ``while_loop`` silently burns ``max_sweeps``.  "Healthy" is
+    semiring-aware: the ``min`` reduce's identity is ``+inf`` (SSSP's
+    legitimate "unreachable"), so only NaN and wrong-direction infinity
+    count as divergence; symmetrically for ``max``; for ``add``/``mul``
+    any non-finite value is divergence.  Integer states cannot diverge —
+    the check folds to a constant True at trace time, costing the int
+    apps (BFS, CC) nothing."""
+    if not jnp.issubdtype(state.dtype, jnp.floating):
+        return jnp.bool_(True)
+    if reduce == "min":
+        bad = jnp.isnan(state) | jnp.isneginf(state)
+    elif reduce == "max":
+        bad = jnp.isnan(state) | jnp.isposinf(state)
+    else:
+        bad = jnp.logical_not(jnp.isfinite(state))
+    return jnp.logical_not(jnp.any(bad))
+
+
 def _gather_launch_values(plan: BlockPlan, launch: ir.Launch, s: slice,
                           meta: Mapping[str, jnp.ndarray],
                           mutable: Mapping[str, jnp.ndarray],

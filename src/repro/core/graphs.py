@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import validate as validation
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import CodeSeed
 
@@ -52,6 +53,34 @@ from repro.core.seed import CodeSeed
 # *identity* iinfo(int32).max is reserved for pad lanes, which are never
 # fed back into a combine).
 UNREACHED = np.int32(1 << 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvergenceReport:
+    """How a fixpoint run ended (DESIGN.md §9).
+
+    Exactly one of the three terminal flags is set on a completed run:
+
+    * ``converged`` — exact fixpoint reached on a healthy state,
+    * ``diverged`` — the state went numerically unhealthy (NaN, or a
+      wrong-direction infinity for the semiring: see
+      :func:`engine.state_healthy`); the run stopped early instead of
+      burning ``max_sweeps`` on an equality check NaN can never pass,
+    * ``exhausted`` — ``max_sweeps`` elapsed on a healthy,
+      still-changing state.
+
+    ``negative_cycle`` refines ``exhausted`` for Bellman-Ford SSSP: a
+    synchronous sweep that still relaxes something after ``num_nodes``
+    rounds proves a reachable negative cycle, so exhaustion at the
+    default bound (``num_nodes + 1``) is a detection, not a timeout.
+    ``sweeps`` is the number of sweep executions the run made."""
+
+    sweeps: int = 0
+    converged: bool = False
+    diverged: bool = False
+    exhausted: bool = False
+    negative_cycle: bool = False
+
 
 _plan_builds = 0
 
@@ -166,12 +195,29 @@ class _FixpointApp:
     num_nodes: int
     _run: object
     _state_key: str
-    sweeps_run: int = 0
-    converged: bool = False
     tuning: object | None = None   # TuningResult when built via backend="auto"
     driver: str = "resident"
+    # how the last run() ended; sweeps_run/converged stay as properties
+    convergence: ConvergenceReport = dataclasses.field(
+        default_factory=ConvergenceReport)
+    validation: object | None = None    # ValidationReport from from_edges
+    degradations: tuple = ()            # DegradationEvents from the build
     # jitted resident converge programs, keyed by single/batched step
     _resident: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    # SSSP overrides: exhaustion at >= num_nodes + 1 synchronous sweeps
+    # proves a reachable negative cycle (Bellman-Ford), nothing else does
+    _detects_negative_cycle = False
+
+    @property
+    def sweeps_run(self) -> int:
+        """Back-compatible alias of ``convergence.sweeps``."""
+        return self.convergence.sweeps
+
+    @property
+    def converged(self) -> bool:
+        """Back-compatible alias of ``convergence.converged``."""
+        return self.convergence.converged
 
     def sweep(self, state: jnp.ndarray) -> jnp.ndarray:
         """One relaxation pass folded into the previous state."""
@@ -200,61 +246,102 @@ class _FixpointApp:
             step = self._step_body()
             if batched:
                 step = jax.vmap(step)
+            reduce = self.plan.seed.reduce
 
             def converge(state, max_sweeps):
                 def cond(carry):
-                    _state, count, changed = carry
-                    return jnp.logical_and(changed, count < max_sweeps)
+                    _state, count, changed, healthy = carry
+                    return jnp.logical_and(
+                        jnp.logical_and(changed, healthy),
+                        count < max_sweeps)
 
                 def body(carry):
-                    state, count, _changed = carry
+                    state, count, _changed, _healthy = carry
                     new = step(state)
                     return (new, count + jnp.int32(1),
-                            jnp.logical_not(jnp.array_equal(new, state)))
+                            jnp.logical_not(jnp.array_equal(new, state)),
+                            eng.state_healthy(new, reduce))
 
-                init = (state, jnp.int32(0), jnp.bool_(True))
-                final, count, changed = jax.lax.while_loop(cond, body, init)
-                return final, count, jnp.logical_not(changed)
+                # the health flag rides the carry: a NaN-poisoned state
+                # can never pass the equality check (NaN != NaN), so
+                # without it the loop silently burns max_sweeps.  For
+                # integer states state_healthy folds to a trace-time
+                # constant True — the int apps pay nothing.
+                init = (state, jnp.int32(0), jnp.bool_(True),
+                        eng.state_healthy(state, reduce))
+                final, count, changed, healthy = jax.lax.while_loop(
+                    cond, body, init)
+                return final, count, changed, healthy
 
             fn = jax.jit(converge)
             self._resident[batched] = fn
         return fn
 
+    def _report(self, sweeps: int, changed: bool, healthy: bool,
+                max_sweeps: int) -> ConvergenceReport:
+        """Fold a run's terminal carry into a :class:`ConvergenceReport`
+        — one classification shared by both drivers, so host and
+        resident tell bitwise-identical convergence stories."""
+        converged = healthy and not changed
+        diverged = not healthy
+        exhausted = healthy and changed and sweeps >= max_sweeps
+        negative_cycle = bool(exhausted and self._detects_negative_cycle
+                              and max_sweeps >= self.num_nodes + 1)
+        return ConvergenceReport(sweeps=sweeps, converged=converged,
+                                 diverged=diverged, exhausted=exhausted,
+                                 negative_cycle=negative_cycle)
+
     def _converge(self, state: jnp.ndarray, max_sweeps: int | None,
                   step=None, driver: str | None = None,
                   batched: bool = False) -> jnp.ndarray:
-        """Iterate the sweep to exact fixpoint.  ``sweeps_run`` /
-        ``converged`` record how the run ended — a run that exhausts
-        ``max_sweeps`` without reaching a fixpoint reports
-        ``converged=False``.  An explicit ``step`` override always runs on
-        the host driver (it is an arbitrary callable)."""
+        """Iterate the sweep to exact fixpoint.  ``self.convergence``
+        records how the run ended (:class:`ConvergenceReport`): a
+        fixpoint (``converged``), a numerically unhealthy state caught
+        by the in-carry health check (``diverged`` — the run stops
+        early instead of burning ``max_sweeps``), or the sweep cap on a
+        healthy, still-changing state (``exhausted``, refined to
+        ``negative_cycle`` for Bellman-Ford at the full bound).  An
+        explicit ``step`` override always runs on the host driver (it is
+        an arbitrary callable)."""
         if max_sweeps is None:
             max_sweeps = self.num_nodes + 1
         driver = driver or self.driver
         if step is not None:
             driver = "host"
-        self.sweeps_run = 0
-        self.converged = False
+        self.convergence = ConvergenceReport()
         if driver == "resident":
             fn = self._resident_converge(batched)
-            final, count, converged = fn(state,
-                                         jnp.asarray(max_sweeps, jnp.int32))
+            final, count, changed, healthy = fn(
+                state, jnp.asarray(max_sweeps, jnp.int32))
             # the ONE host sync of the whole run
-            self.sweeps_run = int(count)
-            self.converged = bool(converged)
+            self.convergence = self._report(int(count), bool(changed),
+                                            bool(healthy), max_sweeps)
             return final
         if driver != "host":
             raise ValueError(f"unknown driver {driver!r}; "
                              "expected 'resident' or 'host'")
+        reduce = self.plan.seed.reduce
         if step is None:
             step = jax.vmap(self.sweep) if batched else self.sweep
+        # an already-poisoned initial state never enters the loop — the
+        # resident driver's cond rejects it at count 0, so parity here
+        if not bool(eng.state_healthy(jnp.asarray(state), reduce)):
+            self.convergence = self._report(0, True, False, max_sweeps)
+            return state
+        count = 0
         for _ in range(max_sweeps):
             new = step(state)
-            self.sweeps_run += 1
+            count += 1
+            if not bool(eng.state_healthy(new, reduce)):
+                self.convergence = self._report(count, True, False,
+                                                max_sweeps)
+                return new
             if bool(jnp.array_equal(new, state)):
-                self.converged = True
+                self.convergence = self._report(count, False, True,
+                                                max_sweeps)
                 return new
             state = new
+        self.convergence = self._report(count, True, True, max_sweeps)
         return state
 
 
@@ -317,27 +404,36 @@ class BFS(_FixpointApp):
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
-                   driver: str = "resident") -> "BFS":
+                   driver: str = "resident",
+                   validate: str = "strict") -> "BFS":
         seed = bfs_seed()
+        src, dst, _, vreport = validation.validate_edges(
+            src, dst, num_nodes, policy=validate)
         access = {"dst": np.asarray(dst), "src": np.asarray(src)}
-        if backend == "auto" or tune:
-            check_auto_kwargs("BFS.from_edges", backend=backend, fused=fused,
-                              stage_b=stage_b, cost=cost,
-                              interpret=interpret)
-            lv = np.full(num_nodes, UNREACHED, np.int32)
-            lv[0] = 0
-            plan, run, tuning = _autotune_build(
-                seed, access, num_nodes, {}, "level", jnp.asarray(lv),
-                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
-            return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="level", tuning=tuning, driver=driver)
-        cost = cost or CostModel(lane_width=lane_width)
-        plan = _build(seed, access, num_nodes, num_nodes, cost,
-                      plan_cache_dir)
-        run = eng.make_executor(plan, {}, **_executor_kwargs(
-            backend, fused, stage_b, interpret))
-        return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="level", driver=driver)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                check_auto_kwargs("BFS.from_edges", backend=backend,
+                                  fused=fused, stage_b=stage_b, cost=cost,
+                                  interpret=interpret)
+                lv = np.full(num_nodes, UNREACHED, np.int32)
+                lv[0] = 0
+                plan, run, tuning = _autotune_build(
+                    seed, access, num_nodes, {}, "level", jnp.asarray(lv),
+                    plan_cache_dir, tune_cache_dir, lane_width,
+                    driver=driver)
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="level", tuning=tuning, driver=driver)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = _build(seed, access, num_nodes, num_nodes, cost,
+                              plan_cache_dir)
+                run = eng.make_executor(plan, {}, **_executor_kwargs(
+                    backend, fused, stage_b, interpret))
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="level", driver=driver)
+        app.validation = vreport
+        app.degradations = tuple(events)
+        return app
 
     def _init_levels(self, sources: np.ndarray) -> jnp.ndarray:
         lv = np.full((sources.shape[0], self.num_nodes), UNREACHED, np.int32)
@@ -374,7 +470,17 @@ class SSSP(_FixpointApp):
     the seed's *elementwise* slot, so they are reordered once into exec
     order and closed over as device constants — the mutable input per sweep
     is the distance vector alone.
+
+    Negative weights are legal (that is what Bellman-Ford is for); a
+    *reachable negative cycle* is detected, not looped on: a synchronous
+    sweep that still relaxes something after ``num_nodes`` rounds proves
+    one, so a run that exhausts the default ``num_nodes + 1`` bound on a
+    finite state reports ``convergence.negative_cycle=True`` — and the
+    returned distances are then cycle-tainted lower bounds, not shortest
+    paths.
     """
+
+    _detects_negative_cycle = True
 
     @classmethod
     def from_edges(cls, src: np.ndarray, dst: np.ndarray,
@@ -385,29 +491,38 @@ class SSSP(_FixpointApp):
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
-                   driver: str = "resident") -> "SSSP":
+                   driver: str = "resident",
+                   validate: str = "strict") -> "SSSP":
         seed = sssp_seed()
+        src, dst, weight, vreport = validation.validate_edges(
+            src, dst, num_nodes, weight=weight, policy=validate)
         access = {"dst": np.asarray(dst), "src": np.asarray(src)}
         static = {"weight": np.asarray(weight, np.float32)}
-        if backend == "auto" or tune:
-            check_auto_kwargs("SSSP.from_edges", backend=backend, fused=fused,
-                              stage_b=stage_b, cost=cost,
-                              interpret=interpret)
-            d0 = np.full(num_nodes, np.inf, np.float32)
-            d0[0] = 0.0
-            plan, run, tuning = _autotune_build(
-                seed, access, num_nodes, static, "dist", jnp.asarray(d0),
-                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
-            return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="dist", tuning=tuning, driver=driver)
-        cost = cost or CostModel(lane_width=lane_width)
-        plan = _build(seed, access, num_nodes, num_nodes, cost,
-                      plan_cache_dir)
-        run = eng.make_executor(
-            plan, static,
-            **_executor_kwargs(backend, fused, stage_b, interpret))
-        return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="dist", driver=driver)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                check_auto_kwargs("SSSP.from_edges", backend=backend,
+                                  fused=fused, stage_b=stage_b, cost=cost,
+                                  interpret=interpret)
+                d0 = np.full(num_nodes, np.inf, np.float32)
+                d0[0] = 0.0
+                plan, run, tuning = _autotune_build(
+                    seed, access, num_nodes, static, "dist",
+                    jnp.asarray(d0), plan_cache_dir, tune_cache_dir,
+                    lane_width, driver=driver)
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="dist", tuning=tuning, driver=driver)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = _build(seed, access, num_nodes, num_nodes, cost,
+                              plan_cache_dir)
+                run = eng.make_executor(
+                    plan, static,
+                    **_executor_kwargs(backend, fused, stage_b, interpret))
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="dist", driver=driver)
+        app.validation = vreport
+        app.degradations = tuple(events)
+        return app
 
     def run(self, source: int, max_sweeps: int | None = None) -> np.ndarray:
         dist = np.full(self.num_nodes, np.inf, np.float32)
@@ -433,29 +548,39 @@ class ConnectedComponents(_FixpointApp):
                    plan_cache_dir: str | None = None,
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
-                   driver: str = "resident"
+                   driver: str = "resident",
+                   validate: str = "strict"
                    ) -> "ConnectedComponents":
         seed = cc_seed()
+        src, dst, _, vreport = validation.validate_edges(
+            src, dst, num_nodes, policy=validate)
         s = np.concatenate([np.asarray(src), np.asarray(dst)])
         d = np.concatenate([np.asarray(dst), np.asarray(src)])
         access = {"dst": d, "src": s}
-        if backend == "auto" or tune:
-            check_auto_kwargs("ConnectedComponents.from_edges", backend=backend, fused=fused,
-                              stage_b=stage_b, cost=cost,
-                              interpret=interpret)
-            labels = jnp.arange(num_nodes, dtype=jnp.int32)
-            plan, run, tuning = _autotune_build(
-                seed, access, num_nodes, {}, "label", labels,
-                plan_cache_dir, tune_cache_dir, lane_width, driver=driver)
-            return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                       _state_key="label", tuning=tuning, driver=driver)
-        cost = cost or CostModel(lane_width=lane_width)
-        plan = _build(seed, access, num_nodes, num_nodes, cost,
-                      plan_cache_dir)
-        run = eng.make_executor(plan, {}, **_executor_kwargs(
-            backend, fused, stage_b, interpret))
-        return cls(plan=plan, num_nodes=num_nodes, _run=run,
-                   _state_key="label", driver=driver)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                check_auto_kwargs("ConnectedComponents.from_edges",
+                                  backend=backend, fused=fused,
+                                  stage_b=stage_b, cost=cost,
+                                  interpret=interpret)
+                labels = jnp.arange(num_nodes, dtype=jnp.int32)
+                plan, run, tuning = _autotune_build(
+                    seed, access, num_nodes, {}, "label", labels,
+                    plan_cache_dir, tune_cache_dir, lane_width,
+                    driver=driver)
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="label", tuning=tuning, driver=driver)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = _build(seed, access, num_nodes, num_nodes, cost,
+                              plan_cache_dir)
+                run = eng.make_executor(plan, {}, **_executor_kwargs(
+                    backend, fused, stage_b, interpret))
+                app = cls(plan=plan, num_nodes=num_nodes, _run=run,
+                          _state_key="label", driver=driver)
+        app.validation = vreport
+        app.degradations = tuple(events)
+        return app
 
     def run(self, max_sweeps: int | None = None) -> np.ndarray:
         """Component labels: ``label[v]`` = min node id in v's component."""

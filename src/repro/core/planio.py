@@ -250,15 +250,19 @@ def cached_build_plan(seed, access: dict, out_len: int, data_len: int,
         _msgpack()
     except RuntimeError:
         return build_plan(seed, access, out_len, data_len, cost=cost)
+    from repro.core import validate as vmod
     digest = plan_digest(seed.name, access, out_len, data_len, cost)
     path = os.path.join(cache_dir, f"{seed.name}-{digest}.plan")
     if os.path.exists(path):
         try:
             return load_plan(path)
         except Exception as e:
-            # corrupt / truncated / other-version entry: warn, drop the
-            # bad file, and rebuild — a cache may only skip work, never
-            # crash the build or change its result.
+            # corrupt / truncated / torn / other-version entry: warn,
+            # drop the bad file, and rebuild — a cache may only skip
+            # work, never crash the build or change its result.
+            vmod.record_degradation(
+                "plan_cache", "corrupt_entry", f"{path}: {e!r}",
+                "rebuild from scratch + republish")
             warnings.warn(f"plan cache entry {path} unreadable ({e!r}); "
                           "rebuilding plan from scratch", RuntimeWarning)
             try:
@@ -266,13 +270,27 @@ def cached_build_plan(seed, access: dict, out_len: int, data_len: int,
             except OSError:             # pragma: no cover - racing unlink
                 pass
     plan = build_plan(seed, access, out_len, data_len, cost=cost)
-    os.makedirs(cache_dir, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
-    os.close(fd)
+    # unwritable dir (EROFS, EACCES, ENOSPC, quota): the plan is already
+    # built — degrade to in-memory use with ONE warning per dir + a
+    # recorded DegradationEvent instead of raising out of the build
+    tmp = None
     try:
+        os.makedirs(cache_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+        os.close(fd)
         save_plan(tmp, plan)
         os.replace(tmp, path)           # atomic publish
+    except OSError as e:
+        vmod.record_degradation(
+            "plan_cache", "write_failed", f"{cache_dir}: {e!r}",
+            "in-memory plan (no persistence)")
+        vmod.warn_once(("plan_cache_write", cache_dir),
+                       f"plan cache dir {cache_dir} is unwritable "
+                       f"({e!r}); plans will be rebuilt each process")
     finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        try:
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
+        except OSError:                 # pragma: no cover - EROFS cleanup
+            pass
     return plan

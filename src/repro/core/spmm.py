@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import validate as validation
 from repro.core.plan import BlockPlan, CostModel
 from repro.core.seed import spmv_seed
 
@@ -40,6 +41,8 @@ class SpMM:
     _run: object
     reduce: str = "add"
     tuning: object | None = None   # TuningResult when built via backend="auto"
+    validation: object | None = None    # ValidationReport from from_coo
+    degradations: tuple = ()            # DegradationEvents from the build
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -52,7 +55,8 @@ class SpMM:
                  reduce: str = "add",
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
-                 tune_cache_dir: str | None = None) -> "SpMM":
+                 tune_cache_dir: str | None = None,
+                 validate: str = "strict") -> "SpMM":
         from repro.core import planio
         if backend not in _BACKENDS:
             raise ValueError(
@@ -60,37 +64,48 @@ class SpMM:
                 "the Pallas emitter carries scalar lanes only "
                 "(rank-polymorphism rules, DESIGN.md §8)")
         seed = spmv_seed(reduce=reduce)
+        # repair combines duplicates with THIS product's semiring reduce —
+        # min/max/mul dedup differently from add (DESIGN.md §9)
+        rows, cols, vals, vreport = validation.validate_coo(
+            rows, cols, np.asarray(vals), shape, policy=validate,
+            reduce=reduce)
         access = {"row": rows, "col": cols}
-        vals = np.asarray(vals)
-        if backend == "auto" or tune:
-            from repro.core.graphs import check_auto_kwargs
-            check_auto_kwargs("SpMM.from_coo", backend=backend,
-                              fused=fused, stage_b=stage_b, cost=cost,
-                              coalesce=coalesce)
-            from repro.tune import autotune, candidate_space
-            space = [c for c in candidate_space(seed,
-                                                lane_widths=(lane_width,))
-                     if c.backend != "pallas"]
-            rng = np.random.default_rng(0)
-            b_ex = jnp.asarray(rng.standard_normal(
-                (shape[1], 8)).astype(np.float32))
-            y0 = jnp.full((shape[0], 8), seed.reduce_identity, jnp.float32)
-            plan, run, result = autotune(
-                seed, access, shape[0], shape[1], {"value": vals},
-                {"x": b_ex}, y0, space=space,
-                tune_cache_dir=tune_cache_dir,
-                plan_cache_dir=plan_cache_dir,
-                cache_extra="spmm:d8")
-            return cls(plan=plan, shape=shape, _run=run, reduce=reduce,
-                       tuning=result)
-        cost = cost or CostModel(lane_width=lane_width)
-        plan = planio.cached_build_plan(seed, access, out_len=shape[0],
-                                        data_len=shape[1], cost=cost,
-                                        cache_dir=plan_cache_dir)
-        run = eng.make_executor(plan, {"value": vals}, backend=backend,
-                                fused=fused, stage_b=stage_b,
-                                coalesce=coalesce)
-        return cls(plan=plan, shape=shape, _run=run, reduce=reduce)
+        with validation.collect_degradations() as events:
+            if backend == "auto" or tune:
+                from repro.core.graphs import check_auto_kwargs
+                check_auto_kwargs("SpMM.from_coo", backend=backend,
+                                  fused=fused, stage_b=stage_b, cost=cost,
+                                  coalesce=coalesce)
+                from repro.tune import autotune, candidate_space
+                space = [c for c in candidate_space(
+                            seed, lane_widths=(lane_width,))
+                         if c.backend != "pallas"]
+                rng = np.random.default_rng(0)
+                b_ex = jnp.asarray(rng.standard_normal(
+                    (shape[1], 8)).astype(np.float32))
+                y0 = jnp.full((shape[0], 8), seed.reduce_identity,
+                              jnp.float32)
+                plan, run, result = autotune(
+                    seed, access, shape[0], shape[1], {"value": vals},
+                    {"x": b_ex}, y0, space=space,
+                    tune_cache_dir=tune_cache_dir,
+                    plan_cache_dir=plan_cache_dir,
+                    cache_extra="spmm:d8")
+                app = cls(plan=plan, shape=shape, _run=run, reduce=reduce,
+                          tuning=result)
+            else:
+                cost = cost or CostModel(lane_width=lane_width)
+                plan = planio.cached_build_plan(seed, access,
+                                                out_len=shape[0],
+                                                data_len=shape[1], cost=cost,
+                                                cache_dir=plan_cache_dir)
+                run = eng.make_executor(plan, {"value": vals},
+                                        backend=backend, fused=fused,
+                                        stage_b=stage_b, coalesce=coalesce)
+                app = cls(plan=plan, shape=shape, _run=run, reduce=reduce)
+        app.validation = vreport
+        app.degradations = tuple(events)
+        return app
 
     def matmat(self, bmat: jnp.ndarray,
                y_init: jnp.ndarray | None = None) -> jnp.ndarray:

@@ -1,0 +1,3 @@
+# Test-support utilities (fault injection, stress harnesses).  Nothing in
+# here is imported by the production modules — the faults are opt-in
+# context managers for tests/test_robust.py and CI's robustness step.

@@ -1,0 +1,211 @@
+"""Fault-injection context managers (DESIGN.md §9).
+
+Every graceful-degradation claim in the robustness model is only worth
+what its end-to-end proof is worth: these context managers inject the
+real failure classes — unwritable cache dirs, full disks, torn publishes,
+raising backends, broken/noisy timers — scoped to a ``with`` block, so
+``tests/test_robust.py`` can drive each documented fallback path through
+the actual production code and assert both the result (bitwise-equal
+output where applicable) and the recorded
+:class:`~repro.core.validate.DegradationEvent` trail.
+
+Filesystem faults are path-scoped: only operations targeting the given
+directory (or its children) fail; everything else — pytest's own tmp
+files, JAX's caches — is untouched.  All patches restore on exit, even
+when the body raises.
+"""
+from __future__ import annotations
+
+import builtins
+import contextlib
+import errno
+import os
+import tempfile
+
+
+def _under(root, p) -> bool:
+    try:
+        p = os.fspath(p)
+    except TypeError:                   # e.g. an int fd through os.fdopen
+        return False
+    if isinstance(p, bytes):
+        p = os.fsdecode(p)
+    if not isinstance(p, str):
+        return False
+    a = os.path.abspath(p)
+    r = os.path.abspath(os.fsdecode(os.fspath(root)))
+    return a == r or a.startswith(r + os.sep)
+
+
+def _oserror(err: int, path) -> OSError:
+    return OSError(err, os.strerror(err), os.fspath(path))
+
+
+@contextlib.contextmanager
+def deny_writes(root, err: int = errno.EROFS):
+    """Simulate an unwritable cache dir (default EROFS — a read-only
+    mount; pass ``errno.EACCES`` for a permission wall).
+
+    Directory creation under ``root`` fails unless the directory already
+    exists (matching real read-only semantics, where ``makedirs(...,
+    exist_ok=True)`` on an existing dir succeeds), temp-file creation and
+    atomic publishes under ``root`` fail, and opening any file under
+    ``root`` for writing fails.  Reads pass through untouched."""
+    real_open = builtins.open
+    real_makedirs = os.makedirs
+    real_replace = os.replace
+    real_mkstemp = tempfile.mkstemp
+
+    def open_(file, mode="r", *a, **k):
+        if any(c in mode for c in "wxa+") and _under(root, file):
+            raise _oserror(err, file)
+        return real_open(file, mode, *a, **k)
+
+    def makedirs_(name, *a, **k):
+        if _under(root, name):
+            if os.path.isdir(name):
+                return                  # exist_ok on a read-only mount
+            raise _oserror(err, name)
+        return real_makedirs(name, *a, **k)
+
+    def replace_(src, dst, *a, **k):
+        if _under(root, dst) or _under(root, src):
+            raise _oserror(err, dst)
+        return real_replace(src, dst, *a, **k)
+
+    def mkstemp_(*a, **k):
+        d = k.get("dir") or (a[2] if len(a) > 2 else None)
+        if d is not None and _under(root, d):
+            raise _oserror(err, d)
+        return real_mkstemp(*a, **k)
+
+    builtins.open = open_
+    os.makedirs = makedirs_
+    os.replace = replace_
+    tempfile.mkstemp = mkstemp_
+    try:
+        yield
+    finally:
+        builtins.open = real_open
+        os.makedirs = real_makedirs
+        os.replace = real_replace
+        tempfile.mkstemp = real_mkstemp
+
+
+@contextlib.contextmanager
+def disk_full(root):
+    """Simulate ENOSPC mid-publish: directories and temp files are
+    created fine (the dir entry fits), but writing file *content* under
+    ``root`` and the final atomic rename fail — the late-failure shape a
+    real full disk produces, which exercises the temp-file cleanup path
+    rather than the early makedirs/mkstemp bail-out."""
+    real_open = builtins.open
+    real_replace = os.replace
+
+    def open_(file, mode="r", *a, **k):
+        if any(c in mode for c in "wxa+") and _under(root, file):
+            raise _oserror(errno.ENOSPC, file)
+        return real_open(file, mode, *a, **k)
+
+    def replace_(src, dst, *a, **k):
+        if _under(root, dst):
+            raise _oserror(errno.ENOSPC, dst)
+        return real_replace(src, dst, *a, **k)
+
+    builtins.open = open_
+    os.replace = replace_
+    try:
+        yield
+    finally:
+        builtins.open = real_open
+        os.replace = real_replace
+
+
+@contextlib.contextmanager
+def torn_writes(root, keep: float = 0.5):
+    """Tear every atomic publish under ``root``: the temp file is
+    truncated to ``keep`` of its length immediately before the rename,
+    so the published cache entry is a torn write — exactly what a crash
+    between ``write`` and ``fsync`` leaves behind.  The publish itself
+    "succeeds"; the corruption must be caught by the *reader*
+    (checksums + structural validation)."""
+    real_replace = os.replace
+
+    def replace_(src, dst, *a, **k):
+        if _under(root, dst) and os.path.isfile(src):
+            size = os.path.getsize(src)
+            with open(src, "r+b") as f:
+                f.truncate(max(int(size * keep), 0))
+        return real_replace(src, dst, *a, **k)
+
+    os.replace = replace_
+    try:
+        yield
+    finally:
+        os.replace = real_replace
+
+
+@contextlib.contextmanager
+def backend_failure(backend: str = "segsum",
+                    message: str = "injected backend failure"):
+    """Make ``engine.make_executor`` raise for one backend — the
+    raising-tuning-candidate fault.  The tuner must disqualify the
+    candidate (recording a DegradationEvent) and pick among the
+    survivors, never crash the build."""
+    from repro.core import engine as eng
+    real = eng.make_executor
+
+    def fake(plan, static_data, backend_arg="jax", **kw):
+        b = kw.pop("backend", backend_arg)
+        if b == backend:
+            raise RuntimeError(f"{message} (backend={b})")
+        return real(plan, static_data, backend=b, **kw)
+
+    eng.make_executor = fake
+    try:
+        yield
+    finally:
+        eng.make_executor = real
+
+
+@contextlib.contextmanager
+def measurement_failure(message: str = "injected measurement failure"):
+    """Break the tuner's timing harness outright (the total-measurement
+    -failure fault): ``autotune`` must fall back to the analytical
+    cost-model pick instead of raising."""
+    from repro.tune import search
+    real = search._measure_all
+
+    def fake(*a, **k):
+        raise RuntimeError(message)
+
+    search._measure_all = fake
+    try:
+        yield
+    finally:
+        search._measure_all = real
+
+
+@contextlib.contextmanager
+def timing_outliers(period: int = 3, spike_us: float = 50_000.0):
+    """Inject periodic timing spikes (scheduler preemption, GC pause)
+    into the tuner's per-round timer: every ``period``-th timed round
+    reads ``spike_us`` microseconds too slow.  The paired-ratio
+    measurement discipline must still complete and pick a viable
+    candidate."""
+    from repro.tune import search
+    real = search._timed_round
+    state = {"n": 0}
+
+    def fake(run, mutable, out_init, iters):
+        t = real(run, mutable, out_init, iters)
+        state["n"] += 1
+        if state["n"] % period == 0:
+            t += spike_us
+        return t
+
+    search._timed_round = fake
+    try:
+        yield
+    finally:
+        search._timed_round = real

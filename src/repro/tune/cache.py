@@ -52,6 +52,7 @@ def entry_path(cache_dir: str, key: str) -> str:
 def load_entry(cache_dir: str, key: str) -> dict | None:
     """The stored tuning decision, or None (miss / unreadable / other
     schema).  Never raises: a cache problem costs a re-tune, not a run."""
+    from repro.core import validate as vmod
     path = entry_path(cache_dir, key)
     if not os.path.exists(path):
         return None
@@ -62,6 +63,8 @@ def load_entry(cache_dir: str, key: str) -> dict | None:
             raise ValueError(f"schema {entry.get('schema')!r} != {SCHEMA}")
         return entry
     except Exception as e:
+        vmod.record_degradation("tune_cache", "corrupt_entry",
+                                f"{path}: {e!r}", "re-tune + republish")
         warnings.warn(f"tuning cache entry {path} unreadable ({e!r}); "
                       "re-tuning", RuntimeWarning)
         try:
@@ -73,15 +76,33 @@ def load_entry(cache_dir: str, key: str) -> dict | None:
 
 def store_entry(cache_dir: str, key: str, payload: dict) -> None:
     """Atomic publish (write-to-temp + rename): concurrent tuners of the
-    same matrix race benignly — last writer wins with a complete file."""
-    os.makedirs(cache_dir, exist_ok=True)
+    same matrix race benignly — last writer wins with a complete file.
+
+    An unwritable dir (EROFS, EACCES, ENOSPC) degrades to not persisting
+    the decision — one warning per dir plus a recorded
+    :class:`~repro.core.validate.DegradationEvent`, never an exception:
+    losing a cache entry costs a future re-tune, raising loses the tuning
+    result that was just computed."""
+    from repro.core import validate as vmod
     payload = {"schema": SCHEMA, "key": key, **payload}
-    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    tmp = None
     try:
+        os.makedirs(cache_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
         with os.fdopen(fd, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
         os.replace(tmp, entry_path(cache_dir, key))
+    except OSError as e:
+        vmod.record_degradation(
+            "tune_cache", "write_failed", f"{cache_dir}: {e!r}",
+            "tuning decision not persisted (re-tune next process)")
+        vmod.warn_once(("tune_cache_write", cache_dir),
+                       f"tuning cache dir {cache_dir} is unwritable "
+                       f"({e!r}); decisions will not persist")
     finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        try:
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
+        except OSError:                 # pragma: no cover - EROFS cleanup
+            pass

@@ -51,12 +51,17 @@ class Measurement:
     us_per_call: float
     predicted_us: float
     ok: bool                  # matched the oracle output
+    error: str | None = None  # raised during build/warmup/measurement
 
     def to_dict(self) -> dict:
-        return {"candidate": self.candidate.to_dict(),
-                "us_per_call": round(self.us_per_call, 2),
-                "predicted_us": round(self.predicted_us, 2),
-                "ok": self.ok}
+        d = {"candidate": self.candidate.to_dict(),
+             "us_per_call": round(self.us_per_call, 2)
+             if np.isfinite(self.us_per_call) else None,
+             "predicted_us": round(self.predicted_us, 2),
+             "ok": self.ok}
+        if self.error is not None:
+            d["error"] = self.error
+        return d
 
 
 @dataclasses.dataclass
@@ -69,6 +74,11 @@ class TuningResult:
     platform: str
     features: dict                 # plan_key -> PlanFeatures (measured run)
     plans_built: int = 1           # distinct plans constructed while tuning
+    # how the winner was chosen: "measurement" (the normal path),
+    # "cache" (warm replay), or "cost_model" (DEGRADED: the measurement
+    # harness failed outright and the analytical ranking picked instead —
+    # a DegradationEvent records why; the pick is never cached)
+    picked_by: str = "measurement"
 
     @property
     def num_measured(self) -> int:
@@ -200,6 +210,8 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
         exec_factory = _default_exec_factory
     sig = tspace.space_signature(space)
 
+    from repro.core import validate as vmod
+
     key = None
     if tune_cache_dir is not None:
         key = tcache.tuning_key(seed.name, seed.reduce, access, out_len,
@@ -207,25 +219,52 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
         if not force:
             entry = tcache.load_entry(tune_cache_dir, key)
             if entry is not None:
-                best = Candidate.from_dict(entry["choice"])
-                plan = _build_plan(seed, access, out_len, data_len, best,
-                                   plan_cache_dir)
-                elem_exec = eng.reorder_static(plan, static_data)
-                run = exec_factory(plan, best, static_data, elem_exec)
-                return plan, run, TuningResult(
-                    best=best, best_us=None, measurements=[],
-                    cache_hit=True, key=key, platform=platform,
-                    features={}, plans_built=1)
+                try:
+                    best = Candidate.from_dict(entry["choice"])
+                    plan = _build_plan(seed, access, out_len, data_len,
+                                       best, plan_cache_dir)
+                    elem_exec = eng.reorder_static(plan, static_data)
+                    run = exec_factory(plan, best, static_data, elem_exec)
+                    return plan, run, TuningResult(
+                        best=best, best_us=None, measurements=[],
+                        cache_hit=True, key=key, platform=platform,
+                        features={}, plans_built=1, picked_by="cache")
+                except Exception as e:
+                    # a cached choice that no longer builds (backend
+                    # gone, changed toolchain) costs a re-tune, not a run
+                    vmod.record_degradation(
+                        "tune_cache", "replay_failed",
+                        f"{entry.get('choice')}: {e!r}", "full re-tune")
+                    warnings.warn(
+                        f"cached tuning choice failed to build ({e!r}); "
+                        "re-tuning from scratch", RuntimeWarning)
 
-    # ---- one plan (and one Data Transfer) per distinct plan key
-    plans, elems, features = {}, {}, {}
+    # ---- one plan (and one Data Transfer) per distinct plan key; a plan
+    # key whose build raises disqualifies its candidates, not the tune
+    plans, elems, features, plan_errors = {}, {}, {}, {}
     for c in space:
-        if c.plan_key not in plans:
+        if c.plan_key in plans or c.plan_key in plan_errors:
+            continue
+        try:
             plan = _build_plan(seed, access, out_len, data_len, c,
                                plan_cache_dir)
             plans[c.plan_key] = plan
             elems[c.plan_key] = eng.reorder_static(plan, static_data)
             features[c.plan_key] = tcost.plan_features(plan)
+        except Exception as e:
+            plan_errors[c.plan_key] = e
+            vmod.record_degradation(
+                "tune", "candidate_failed",
+                f"plan build for {c.plan_key}: {e!r}",
+                "candidates on this plan disqualified")
+            warnings.warn(f"tuning plan build for {c.plan_key} raised "
+                          f"({e!r}); its candidates are disqualified",
+                          RuntimeWarning)
+    if not plans:
+        raise RuntimeError(
+            "autotune: every plan build failed "
+            f"({ {k: repr(v) for k, v in plan_errors.items()} })")
+    space = [c for c in space if c.plan_key in plans]
 
     ranked = tcost.rank_candidates(space, features, platform, top_k=top_k)
 
@@ -235,39 +274,126 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
         oracle = reference_execute(seed, access, data, out_init)
 
     # build + warmup + oracle-check every ranked candidate, then time them
-    # all round-robin so no candidate is charged for its slot in the loop
-    built, runs = [], {}
+    # all round-robin so no candidate is charged for its slot in the loop.
+    # A candidate that RAISES anywhere — executor build, warmup, or a
+    # timed call — is disqualified with a DegradationEvent, never fatal.
+    built, runs, dead = [], {}, []
     for cand, predicted in ranked:
         plan = plans[cand.plan_key]
-        run = exec_factory(plan, cand, static_data, elems[cand.plan_key])
-        ok = True
-        if oracle is not None:
-            ok = _outputs_match(run(mutable_example, out_init), oracle)
-            if not ok:
-                warnings.warn(
-                    f"tuning candidate {cand.label} diverges from the "
-                    "oracle output; rejected", RuntimeWarning)
+        try:
+            run = exec_factory(plan, cand, static_data,
+                               elems[cand.plan_key])
+            ok = True
+            if oracle is not None:
+                ok = _outputs_match(run(mutable_example, out_init), oracle)
+                if not ok:
+                    warnings.warn(
+                        f"tuning candidate {cand.label} diverges from the "
+                        "oracle output; rejected", RuntimeWarning)
+        except Exception as e:
+            vmod.record_degradation(
+                "tune", "candidate_failed", f"{cand.label}: {e!r}",
+                "candidate disqualified")
+            warnings.warn(
+                f"tuning candidate {cand.label} raised during "
+                f"build/warmup ({e!r}); disqualified", RuntimeWarning)
+            dead.append(Measurement(candidate=cand,
+                                    us_per_call=float("inf"),
+                                    predicted_us=predicted, ok=False,
+                                    error=repr(e)))
+            continue
         built.append((cand, predicted, ok, run))
         runs[cand] = run
-    timed = [b[3] if measure_wrap is None else measure_wrap(b[3])
-             for b in built]
-    times = _measure_all(timed, mutable_example, out_init, warmup, iters)
-    measurements = [Measurement(candidate=cand, us_per_call=us,
-                                predicted_us=predicted, ok=ok)
-                    for (cand, predicted, ok, _), us in zip(built, times)]
-
-    viable = [m for m in measurements if m.ok]
-    if not viable:
+    if not built:
         raise RuntimeError(
-            "autotune: every measured candidate diverged from the oracle "
-            f"({[m.candidate.label for m in measurements]})")
-    best_m = min(viable, key=lambda m: m.us_per_call)
-    best = best_m.candidate
+            "autotune: every ranked candidate failed to build "
+            f"({[m.candidate.label for m in dead]})")
 
-    if tune_cache_dir is not None:
+    # per-candidate guard: a backend exception inside a timed round marks
+    # that one candidate failed (subsequent rounds no-op for it) instead
+    # of aborting the whole paired measurement
+    timed_fail: dict[int, Exception] = {}
+
+    def _guard(i, fn):
+        def call(mutable, oi):
+            if i in timed_fail:
+                return oi
+            try:
+                return fn(mutable, oi)
+            except Exception as e:      # noqa: BLE001 - fault boundary
+                timed_fail[i] = e
+                return oi
+        return call
+
+    timed = [_guard(i, b[3] if measure_wrap is None else measure_wrap(b[3]))
+             for i, b in enumerate(built)]
+    picked_by = "measurement"
+    try:
+        times = _measure_all(timed, mutable_example, out_init, warmup,
+                             iters)
+    except Exception as e:
+        # total measurement failure (broken timer, dead device queue):
+        # the analytical cost model already ranked the oracle-checked
+        # candidates — degrade to its pick rather than failing the build
+        times = None
+        picked_by = "cost_model"
+        vmod.record_degradation("tune", "measurement_failed", repr(e),
+                                "analytical cost-model pick")
+        warnings.warn(
+            f"autotune: measurement harness failed ({e!r}); falling back "
+            "to the analytical cost-model ranking", RuntimeWarning)
+
+    measurements = list(dead)
+    if times is None:
+        measurements += [
+            Measurement(candidate=cand, us_per_call=float("inf"),
+                        predicted_us=predicted, ok=ok,
+                        error="measurement harness failed")
+            for cand, predicted, ok, _ in built]
+        viable_built = [b for b in built if b[2]]
+        if not viable_built:
+            raise RuntimeError(
+                "autotune: measurement failed and no candidate passed "
+                "the oracle check — nothing safe to fall back to")
+        best, best_pred, _, _ = min(viable_built, key=lambda b: b[1])
+        best_us = None
+    else:
+        for i, ((cand, predicted, ok, _), us) in enumerate(
+                zip(built, times)):
+            err = timed_fail.get(i)
+            if err is not None:
+                vmod.record_degradation(
+                    "tune", "candidate_failed",
+                    f"{cand.label} (during measurement): {err!r}",
+                    "candidate disqualified")
+                warnings.warn(
+                    f"tuning candidate {cand.label} raised during "
+                    f"measurement ({err!r}); disqualified",
+                    RuntimeWarning)
+                measurements.append(Measurement(
+                    candidate=cand, us_per_call=float("inf"),
+                    predicted_us=predicted, ok=False, error=repr(err)))
+            else:
+                measurements.append(Measurement(
+                    candidate=cand, us_per_call=us,
+                    predicted_us=predicted, ok=ok))
+        viable = [m for m in measurements
+                  if m.ok and np.isfinite(m.us_per_call)]
+        if not viable:
+            raise RuntimeError(
+                "autotune: every measured candidate diverged from the "
+                "oracle or failed "
+                f"({[m.candidate.label for m in measurements]})")
+        best_m = min(viable, key=lambda m: m.us_per_call)
+        best = best_m.candidate
+        best_us = best_m.us_per_call
+
+    # a degraded (cost-model) pick is never cached: the next process
+    # should measure for real, not replay a guess
+    if tune_cache_dir is not None and picked_by == "measurement":
         tcache.store_entry(tune_cache_dir, key, {
             "choice": best.to_dict(),
-            "best_us": round(best_m.us_per_call, 2),
+            "best_us": round(best_us, 2),
             "platform": platform,
             "jax": jax.__version__,
             "space": sig,
@@ -276,6 +402,6 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
         })
 
     return plans[best.plan_key], runs[best], TuningResult(
-        best=best, best_us=best_m.us_per_call, measurements=measurements,
+        best=best, best_us=best_us, measurements=measurements,
         cache_hit=False, key=key, platform=platform, features=features,
-        plans_built=len(plans))
+        plans_built=len(plans), picked_by=picked_by)

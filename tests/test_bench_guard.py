@@ -70,3 +70,62 @@ def test_resident_floor(tmp_path, floor_ok):
                  "backend": "jax", "driver": "resident",
                  "run_speedup_vs_host": v}])
     assert check(g, g) == (0 if floor_ok else 1)
+
+
+# --------------------------- missing-row reporting + distinct exit codes
+def test_missing_rows_warn_by_default(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5),
+                                     _spmv_row("d2", "fused", 1.3)])
+    b = _write(tmp_path / "b.json", [_spmv_row("d", "fused", 1.5)])
+    assert check(a, b) == 0
+    out = capsys.readouterr().out
+    # a per-row line names exactly which baseline row vanished
+    assert "MISSING_IN_NEW,speedup_vs_per_class" in out
+    assert "d2/fused" in out
+    assert "missing (warned, not failed)" in out
+
+
+def test_missing_rows_fail_mode_distinct_exit_code(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5),
+                                     _spmv_row("d2", "fused", 1.3)])
+    b = _write(tmp_path / "b.json", [_spmv_row("d", "fused", 1.5)])
+    assert check(a, b, missing="fail") == 2
+    err = capsys.readouterr().err
+    assert "missing from the candidate" in err and "d2/fused" in err
+
+
+def test_regression_dominates_missing(tmp_path):
+    """Exit 1 (a real regression) outranks exit 2 (missing rows) when
+    both are present under --missing fail."""
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5),
+                                     _spmv_row("d2", "fused", 1.3)])
+    b = _write(tmp_path / "b.json", [_spmv_row("d", "fused", 0.5)])
+    assert check(a, b, missing="fail") == 1
+
+
+def test_malformed_json_exit_code_and_message(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    bad = tmp_path / "torn.json"
+    bad.write_text('{"timings": [')           # torn benchmark artifact
+    assert check(a, str(bad)) == 3
+    err = capsys.readouterr().err
+    assert "torn.json" in err and "not valid JSON" in err
+
+
+def test_missing_file_exit_code(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    assert check(a, str(tmp_path / "nope.json")) == 3
+    assert "cannot read" in capsys.readouterr().err
+
+
+def test_wrong_payload_shape_exit_code(tmp_path, capsys):
+    a = _write(tmp_path / "a.json", [_spmv_row("d", "fused", 1.5)])
+    lst = tmp_path / "list.json"
+    lst.write_text("[1, 2, 3]")
+    assert check(a, str(lst)) == 3
+    assert "not a benchmark payload" in capsys.readouterr().err
+
+
+def test_missing_mode_validated():
+    with pytest.raises(ValueError, match="missing="):
+        check_many([], missing="explode")
