@@ -121,11 +121,19 @@ def collect_degradations():
     active sink, so an app constructor sees the events its cache layers
     record even when a caller is also collecting."""
     sink: list[DegradationEvent] = []
-    _sinks().append(sink)
+    stack = _sinks()
+    stack.append(sink)
     try:
         yield sink
     finally:
-        _sinks().remove(sink)
+        # remove by IDENTITY, never equality: two empty (or equal-content)
+        # sinks compare equal, so list.remove would pop the OUTER
+        # collector when a nested one exits without recording anything —
+        # orphaning the inner sink and raising on the outer exit
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is sink:
+                del stack[i]
+                break
 
 
 def record_degradation(layer: str, kind: str, detail: str,
@@ -281,6 +289,10 @@ def validate_coo(rows, cols, vals, shape, *, policy: str = "strict",
     if len(shape) != 2 or shape[0] < 0 or shape[1] < 0:
         raise InputError(f"shape must be (m >= 0, n >= 0), got {shape!r}",
                          field="shape")
+    if vals.ndim == 0:
+        raise InputError(
+            f"vals must be at least 1-D (one payload per entry), got a "
+            f"0-d scalar ({vals})", field="vals")
     if not (rows.shape[0] == cols.shape[0] == vals.shape[0]):
         raise InputError(
             f"row/col/vals lengths differ: {rows.shape[0]}/"
@@ -345,6 +357,10 @@ def validate_csr(indptr, indices, vals, shape, *, policy: str = "strict",
                              nnz_out=int(np.size(indices)))
     indptr = _as_index_array(indptr, "indptr", policy)
     indices = _as_index_array(indices, "col", policy)
+    if vals.ndim == 0:
+        raise InputError(
+            f"vals must be at least 1-D (one payload per entry), got a "
+            f"0-d scalar ({vals})", field="vals")
     m = int(shape[0])
     if indptr.shape[0] != m + 1:
         raise InputError(

@@ -9,10 +9,15 @@ the actual production code and assert both the result (bitwise-equal
 output where applicable) and the recorded
 :class:`~repro.core.validate.DegradationEvent` trail.
 
-Filesystem faults are path-scoped: only operations targeting the given
-directory (or its children) fail; everything else — pytest's own tmp
-files, JAX's caches — is untouched.  All patches restore on exit, even
-when the body raises.
+Filesystem faults are path- AND thread-scoped: the patches are
+process-global (``builtins.open`` etc.), but only operations issued by
+the thread that entered the context and targeting the given directory
+(or its children) fail; everything else — pytest's own tmp files, JAX's
+compilation-cache threads, parallel test runners — is untouched.  All
+patches restore on exit, even when the body raises.  The non-filesystem
+faults (:func:`backend_failure`, :func:`measurement_failure`,
+:func:`timing_outliers`) patch ``repro``-internal hooks and stay
+process-wide; don't run two of those concurrently.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ import contextlib
 import errno
 import os
 import tempfile
+import threading
 
 
 def _under(root, p) -> bool:
@@ -41,6 +47,20 @@ def _oserror(err: int, path) -> OSError:
     return OSError(err, os.strerror(err), os.fspath(path))
 
 
+def _scoped(root):
+    """Fault predicate: true only for paths under ``root`` touched by
+    the thread that entered the fault context.  The monkeypatches are
+    process-global, so without this any concurrent thread (JAX's
+    compilation cache, a parallel test runner) writing under ``root``
+    during the with-block would absorb an injected fault meant for the
+    test body."""
+    owner = threading.get_ident()
+
+    def hit(p) -> bool:
+        return threading.get_ident() == owner and _under(root, p)
+    return hit
+
+
 @contextlib.contextmanager
 def deny_writes(root, err: int = errno.EROFS):
     """Simulate an unwritable cache dir (default EROFS — a read-only
@@ -55,27 +75,28 @@ def deny_writes(root, err: int = errno.EROFS):
     real_makedirs = os.makedirs
     real_replace = os.replace
     real_mkstemp = tempfile.mkstemp
+    hit = _scoped(root)
 
     def open_(file, mode="r", *a, **k):
-        if any(c in mode for c in "wxa+") and _under(root, file):
+        if any(c in mode for c in "wxa+") and hit(file):
             raise _oserror(err, file)
         return real_open(file, mode, *a, **k)
 
     def makedirs_(name, *a, **k):
-        if _under(root, name):
+        if hit(name):
             if os.path.isdir(name):
                 return                  # exist_ok on a read-only mount
             raise _oserror(err, name)
         return real_makedirs(name, *a, **k)
 
     def replace_(src, dst, *a, **k):
-        if _under(root, dst) or _under(root, src):
+        if hit(dst) or hit(src):
             raise _oserror(err, dst)
         return real_replace(src, dst, *a, **k)
 
     def mkstemp_(*a, **k):
         d = k.get("dir") or (a[2] if len(a) > 2 else None)
-        if d is not None and _under(root, d):
+        if d is not None and hit(d):
             raise _oserror(err, d)
         return real_mkstemp(*a, **k)
 
@@ -101,14 +122,15 @@ def disk_full(root):
     rather than the early makedirs/mkstemp bail-out."""
     real_open = builtins.open
     real_replace = os.replace
+    hit = _scoped(root)
 
     def open_(file, mode="r", *a, **k):
-        if any(c in mode for c in "wxa+") and _under(root, file):
+        if any(c in mode for c in "wxa+") and hit(file):
             raise _oserror(errno.ENOSPC, file)
         return real_open(file, mode, *a, **k)
 
     def replace_(src, dst, *a, **k):
-        if _under(root, dst):
+        if hit(dst):
             raise _oserror(errno.ENOSPC, dst)
         return real_replace(src, dst, *a, **k)
 
@@ -130,9 +152,10 @@ def torn_writes(root, keep: float = 0.5):
     "succeeds"; the corruption must be caught by the *reader*
     (checksums + structural validation)."""
     real_replace = os.replace
+    hit = _scoped(root)
 
     def replace_(src, dst, *a, **k):
-        if _under(root, dst) and os.path.isfile(src):
+        if hit(dst) and os.path.isfile(src):
             size = os.path.getsize(src)
             with open(src, "r+b") as f:
                 f.truncate(max(int(size * keep), 0))

@@ -169,6 +169,61 @@ def _measure_all(runs: list, mutable, out_init, warmup: int, iters: int,
     return out
 
 
+def _guarded(i, fn, timed_fail: dict):
+    """Wrap one candidate's timed callable: the first exception records
+    ``timed_fail[i]`` and every subsequent call no-ops (returns
+    ``out_init``) instead of aborting the whole paired measurement."""
+    def call(mutable, oi):
+        if i in timed_fail:
+            return oi
+        try:
+            return fn(mutable, oi)
+        except Exception as e:          # noqa: BLE001 - fault boundary
+            timed_fail[i] = e
+            return oi
+    return call
+
+
+def _paired_times_live_ref(timed: list, timed_fail: dict, labels: list,
+                           mutable, out_init, warmup: int,
+                           iters: int) -> list[float]:
+    """Paired measurement that survives a failing REFERENCE candidate.
+
+    :func:`measure_paired` scales every candidate's time by
+    ``runs[0]``'s (the reference's) rounds.  If the reference fails
+    mid-measurement, its guarded rounds collapse to near-instant no-ops,
+    so ``t_ref`` tends toward timer noise and every reported
+    ``us_per_call`` is garbage — the tuner could pick a slower winner
+    and cache a bogus ``best_us``.  Whenever the round's reference ends
+    up in ``timed_fail``, the whole estimate is discarded and the
+    surviving candidates are re-measured with a live reference (failed
+    candidates stay ``inf``); repeats until a reference survives or no
+    candidate is left."""
+    idx = list(range(len(timed)))
+    times = [float("inf")] * len(timed)
+    while idx:
+        sub = _measure_all([timed[i] for i in idx], mutable, out_init,
+                           warmup, iters)
+        if idx[0] not in timed_fail:
+            for i, us in zip(idx, sub):
+                times[i] = us
+            return times
+        from repro.core import validate as vmod
+        vmod.record_degradation(
+            "tune", "measurement_failed",
+            f"reference candidate {labels[idx[0]]} failed "
+            "mid-measurement; paired estimate discarded",
+            "re-measured survivors against a live reference")
+        warnings.warn(
+            f"tuning reference candidate {labels[idx[0]]} failed during "
+            "measurement; re-measuring the surviving candidates",
+            RuntimeWarning)
+        idx = [i for i in idx if i not in timed_fail]
+    # every candidate failed: all-inf times make the caller's viable set
+    # empty, which raises the canonical "every candidate failed" error
+    return times
+
+
 def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
              static_data: dict, mutable_example: dict, out_init,
              *, space: list | None = None, platform: str | None = None,
@@ -313,24 +368,15 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     # that one candidate failed (subsequent rounds no-op for it) instead
     # of aborting the whole paired measurement
     timed_fail: dict[int, Exception] = {}
-
-    def _guard(i, fn):
-        def call(mutable, oi):
-            if i in timed_fail:
-                return oi
-            try:
-                return fn(mutable, oi)
-            except Exception as e:      # noqa: BLE001 - fault boundary
-                timed_fail[i] = e
-                return oi
-        return call
-
-    timed = [_guard(i, b[3] if measure_wrap is None else measure_wrap(b[3]))
+    timed = [_guarded(i, b[3] if measure_wrap is None
+                      else measure_wrap(b[3]), timed_fail)
              for i, b in enumerate(built)]
+    labels = [b[0].label for b in built]
     picked_by = "measurement"
     try:
-        times = _measure_all(timed, mutable_example, out_init, warmup,
-                             iters)
+        times = _paired_times_live_ref(timed, timed_fail, labels,
+                                       mutable_example, out_init, warmup,
+                                       iters)
     except Exception as e:
         # total measurement failure (broken timer, dead device queue):
         # the analytical cost model already ranked the oracle-checked

@@ -12,6 +12,7 @@ import json
 import os
 import subprocess
 import sys
+import threading
 import warnings
 
 import numpy as np
@@ -117,6 +118,17 @@ class TestStrict:
             np.array([0]), np.array([1]), 4,
             weight=np.array([-5.0], np.float32))
         assert rep.clean and w[0] == -5.0
+
+    def test_scalar_vals_structured_error(self):
+        # a 0-d payload must be a structured InputError, not a bare
+        # IndexError out of vals.shape[0]
+        for policy in ("strict", "repair"):
+            with pytest.raises(V.InputError, match="0-d scalar") as ei:
+                V.validate_coo([0], [1], 3.0, (2, 2), policy=policy)
+            assert ei.value.field == "vals"
+        with pytest.raises(V.InputError, match="0-d scalar") as ei:
+            V.validate_csr([0, 1], [0], 3.0, (1, 2))
+        assert ei.value.field == "vals"
 
     def test_unknown_policy_raises(self):
         with pytest.raises(ValueError, match="unknown validation policy"):
@@ -351,6 +363,62 @@ def _small_spmv(tmp_path=None, **kw):
     return A, np.asarray(A.matvec(jnp.asarray(x)))
 
 
+class TestDegradationTrail:
+    def test_nested_empty_collector_pops_itself_only(self):
+        # regression: sinks were removed by equality, so an inner
+        # collector that recorded nothing popped the (equal, empty)
+        # OUTER sink and the outer exit raised ValueError
+        with V.collect_degradations() as outer:
+            with V.collect_degradations() as inner:
+                pass
+            V.record_degradation("tune", "candidate_failed", "d", "f")
+        assert len(outer) == 1 and inner == []
+
+    def test_outer_collector_survives_clean_app_builds(self):
+        # every constructor opens its own (possibly empty) collector;
+        # wrapping two clean builds must not corrupt the caller's sink
+        with V.collect_degradations() as trail:
+            _small_spmv()
+            _small_spmv()
+        assert trail == []
+
+    def test_outer_collector_sees_nested_app_events(self, tmp_path):
+        V.reset_warn_once()
+        cache = tmp_path / "plans"
+        with V.collect_degradations() as trail:
+            with faults.deny_writes(cache):
+                with pytest.warns(RuntimeWarning):
+                    A, _ = _small_spmv(plan_cache_dir=str(cache))
+        assert any(e.kind == "write_failed" for e in trail)
+        assert set(A.degradations) <= set(trail)
+
+
+def test_fs_faults_scoped_to_injecting_thread(tmp_path):
+    # the monkeypatches are process-global; the fault must hit only the
+    # thread that entered the context, or concurrent writers (JAX's
+    # compilation cache, parallel runners) absorb injected faults
+    root = tmp_path / "cache"
+    os.makedirs(root)
+    got = {}
+
+    def other_thread():
+        try:
+            with open(root / "other.txt", "w") as f:
+                f.write("ok")
+            got["result"] = "ok"
+        except OSError as e:            # pragma: no cover - failure path
+            got["result"] = e
+
+    with faults.deny_writes(root):
+        with pytest.raises(OSError):
+            open(root / "mine.txt", "w")
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+    assert got["result"] == "ok"
+    assert (root / "other.txt").read_text() == "ok"
+
+
 class TestCacheDegradation:
     def test_readonly_plan_cache_degrades_with_event(self, tmp_path):
         V.reset_warn_once()
@@ -461,6 +529,75 @@ class TestTunerDegradation:
         assert list(cache.glob("tune-*.json")) == []
         _, y_ref = _small_spmv()
         np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+
+    def test_reference_failure_remeasures_with_live_ref(self):
+        # measure_paired scales every time by the REFERENCE's rounds; a
+        # reference that fails mid-measurement collapses t_ref to noise
+        # and poisons every estimate — the harness must discard the
+        # paired estimate and re-measure the survivors
+        from repro.tune import search
+        oi = np.zeros(4, np.float32)
+
+        def good(mutable, o):
+            return o
+
+        def bad(mutable, o):
+            raise RuntimeError("injected flaky reference")
+
+        timed_fail = {}
+        timed = [search._guarded(0, bad, timed_fail),
+                 search._guarded(1, good, timed_fail),
+                 search._guarded(2, good, timed_fail)]
+        with V.collect_degradations() as trail:
+            with pytest.warns(RuntimeWarning, match="re-measuring"):
+                times = search._paired_times_live_ref(
+                    timed, timed_fail, ["ref", "a", "b"], {}, oi, 1, 2)
+        assert list(timed_fail) == [0]
+        assert times[0] == float("inf")
+        assert np.isfinite(times[1]) and np.isfinite(times[2])
+        assert any(e.kind == "measurement_failed"
+                   and "live reference" in e.fallback for e in trail)
+
+        # every candidate failing leaves all-inf times (the caller then
+        # raises its canonical every-candidate-failed error)
+        timed_fail = {}
+        timed = [search._guarded(i, bad, timed_fail) for i in range(2)]
+        with pytest.warns(RuntimeWarning, match="re-measuring"):
+            times = search._paired_times_live_ref(
+                timed, timed_fail, ["x", "y"], {}, oi, 1, 2)
+        assert times == [float("inf")] * 2
+
+    def test_flaky_reference_candidate_end_to_end(self):
+        from repro import tune as T
+        from repro.core.seed import spmv_seed
+        rng = np.random.default_rng(3)
+        rows, cols, vals = _coo(rng, 48, 48, 256)
+        x = jnp.asarray(rng.standard_normal(48).astype(np.float32))
+        state = {"n": 0}
+
+        def wrap(run):
+            # measure_wrap is applied in ranked order, so the first
+            # wrapped candidate is exactly the paired reference
+            i = state["n"]
+            state["n"] += 1
+            if i == 0:
+                def flaky(mutable, oi):
+                    raise RuntimeError("injected flaky device queue")
+                return flaky
+            return run
+
+        with pytest.warns(RuntimeWarning, match="re-measuring"):
+            _, _, result = T.autotune(
+                spmv_seed(), {"row": rows, "col": cols}, 48, 48,
+                {"value": vals}, {"x": x}, jnp.zeros(48, jnp.float32),
+                iters=2, measure_wrap=wrap, cache_extra="test:flaky-ref")
+        assert result.picked_by == "measurement"
+        assert np.isfinite(result.best_us)
+        errs = [m for m in result.measurements if m.error is not None]
+        assert len(errs) == 1
+        assert result.best != errs[0].candidate
+        assert all(np.isfinite(m.us_per_call) for m in result.measurements
+                   if m.error is None)
 
     def test_timing_outliers_still_pick_viable(self):
         with faults.timing_outliers(period=3, spike_us=50_000.0):
