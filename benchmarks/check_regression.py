@@ -8,14 +8,18 @@ Any number of ``(baseline, candidate)`` pairs runs in ONE invocation with
 a single summary table and a single exit code — CI guards the SpMV and
 graph trajectories in one step.
 
-Two row families are guarded, matched across the two files by their
+Three row families are guarded, matched across the two files by their
 identity columns:
 
 * ``speedup_vs_per_class`` (the spmv_exec trajectory — what the fused
   executor and the autotuner are accountable for), and
 * ``run_speedup_vs_host`` (the graph-bench resident-driver trajectory —
   what the device-resident ``lax.while_loop`` / ``fori_loop`` drivers are
-  accountable for, DESIGN.md §7).
+  accountable for, DESIGN.md §7), and
+* ``speedup_vs_shards1`` (the sharded-execution trajectory — per-shard-
+  count SpMV sweep time relative to the single-device baseline timed in
+  the same paired round, DESIGN.md §10; rows come from
+  ``benchmarks.run --sharded`` / ``BENCH_shard.json``).
 
 The guard fails if any matched row's new speedup is below ``min-ratio`` x
 its previous value.  Ratios of speedups (not raw microseconds) are
@@ -47,9 +51,10 @@ import argparse
 import json
 import sys
 
-METRICS = ("speedup_vs_per_class", "run_speedup_vs_host")
+METRICS = ("speedup_vs_per_class", "run_speedup_vs_host",
+           "speedup_vs_shards1")
 _KEYS = ("bench", "dataset", "mode", "backend", "app", "driver",
-         "lane_width")
+         "lane_width", "shards")
 
 # distinct exit codes: CI logs say WHAT failed without reading the table
 EXIT_OK = 0

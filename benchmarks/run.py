@@ -98,6 +98,22 @@ def run_graph_mode(args) -> None:
         _write_json(args.json, "bench_graph.v2", args.scale, rows)
 
 
+def run_sharded_mode(args) -> None:
+    """Sharded-execution mode: SpMV sweep time vs shard count
+    (BENCH_shard.json rows; DESIGN.md §10)."""
+    from benchmarks.sharded import bench_sharded
+
+    print("name,us_per_call,derived")
+    rows = bench_sharded(scale=args.scale)
+    for r in rows:
+        sp = (f"{r['speedup_vs_shards1']:.2f}x_vs_s1"
+              if "speedup_vs_shards1" in r else "baseline")
+        print(f"shard_{r['dataset']}_s{r['shards']},"
+              f"{r['us_per_call']:.1f},{sp}")
+    if args.json:
+        _write_json(args.json, "bench_shard.v1", args.scale, rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "full"])
@@ -106,6 +122,11 @@ def main() -> None:
     ap.add_argument("--graphs", action="store_true",
                     help="graph-application mode (BFS/SSSP/CC; "
                          "BENCH_graph.json)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded-execution mode: SpMV sweep time vs "
+                         "shard count {1,2,4,8} (BENCH_shard.json; run "
+                         "under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 for the full sweep)")
     ap.add_argument("--tuned", action="store_true",
                     help="add backend='auto' rows: per-dataset variant "
                          "selection via repro.tune (chosen config + "
@@ -122,6 +143,9 @@ def main() -> None:
             pass
     if args.graphs:
         run_graph_mode(args)
+        return
+    if args.sharded:
+        run_sharded_mode(args)
         return
     from benchmarks import paper_tables as T
 

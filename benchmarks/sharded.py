@@ -1,0 +1,80 @@
+"""Sharded-execution benchmark: SpMV sweep time vs shard count.
+
+One row per (dataset, shard count in ``SHARD_COUNTS``): the same plan is
+lowered once and partitioned k ways (``ir.partition_plan``, DESIGN.md
+§10), and every k's executor — including the k=1 single-device baseline
+— is timed in ONE ``measure_paired`` call, so the
+``speedup_vs_shards1`` column is a paired same-round ratio, robust to
+machine drift the same way the tuner's and graph bench's ratios are.
+That ratio (not raw microseconds) is what ``check_regression`` pins in
+CI.
+
+Shard counts above the visible device count are skipped LOUDLY (one
+``shard_skipped`` stderr line each, never silently): run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to measure the
+full {1, 2, 4, 8} sweep, as the CI job does.  On a host-simulated mesh
+the speedup is about contention, not scaling — all shards share one
+physical CPU — which is exactly why the guard compares the ratio
+against the checked-in baseline instead of demanding speedup > 1.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apps import SpMV
+from repro.sparse import generators as G
+from repro.tune.search import measure_paired
+
+SHARD_COUNTS = (1, 2, 4, 8)
+LANE_WIDTH = 128
+
+
+def _cases(scale: str) -> list:
+    """Two corpus classes: the paper's skewed irregular case and a
+    regular banded one (shard balance differs sharply between them)."""
+    if scale == "full":
+        return [G.power_law(32768, 16), G.banded(32768, band=27)]
+    return [G.power_law(8192, 12), G.banded(8192, band=13)]
+
+
+def bench_sharded(scale: str = "small",
+                  shard_counts: tuple = SHARD_COUNTS) -> list[dict]:
+    """Returns BENCH_shard.json rows: one per (dataset, shards)."""
+    ndev = len(jax.devices())
+    rows: list[dict] = []
+    for m in _cases(scale):
+        counts, runs = [], []
+        for k in shard_counts:
+            if k > ndev:
+                print(f"shard_skipped,0,{m.name}/s{k}: only {ndev} "
+                      "device(s) visible (set XLA_FLAGS="
+                      "--xla_force_host_platform_device_count=8)",
+                      file=sys.stderr)
+                continue
+            app = SpMV.from_coo(np.asarray(m.rows), np.asarray(m.cols),
+                                np.asarray(m.vals, np.float32), m.shape,
+                                lane_width=LANE_WIDTH,
+                                shards=k if k > 1 else None)
+            counts.append(k)
+            runs.append(app._run)
+        x = jnp.asarray(
+            np.random.default_rng(3).standard_normal(m.shape[1]),
+            jnp.float32)
+        y0 = jnp.zeros(m.shape[0], jnp.float32)
+        # one paired measurement per dataset: every ratio below compares
+        # same-round samples against the shards=1 reference (index 0)
+        ts = measure_paired(runs, {"x": x}, y0)
+        for k, us in zip(counts, ts):
+            row = {"bench": "shard", "dataset": m.name, "app": "spmv",
+                   "backend": "jax", "lane_width": LANE_WIDTH,
+                   "shards": k, "us_per_call": round(us, 2)}
+            if k > 1:
+                # the k=1 row carries no speedup on purpose: its ratio
+                # would be identically 1.0 and guard rows must be earned
+                row["speedup_vs_shards1"] = round(ts[0] / us, 4)
+            rows.append(row)
+    return rows

@@ -50,6 +50,10 @@ class SpMV:
     tuning: object | None = None   # TuningResult when built via backend="auto"
     validation: object | None = None    # ValidationReport from from_coo
     degradations: tuple = ()            # DegradationEvents from the build
+    # sharded execution (DESIGN.md §10): the mesh the executor runs over
+    # (None = single device) and the per-shard plan subtrees
+    mesh: object | None = None
+    _shard_parts: tuple = dataclasses.field(default=(), repr=False)
     # cached zero y_init per dtype: repeated matvecs share one device
     # constant instead of allocating a fresh jnp.zeros per call
     _y0: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -65,7 +69,8 @@ class SpMV:
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
                  tune_cache_dir: str | None = None,
-                 validate: str = "strict") -> "SpMV":
+                 validate: str = "strict",
+                 mesh=None, shards: int | None = None) -> "SpMV":
         """``backend="auto"`` (or ``tune=True``) selects the execution
         variant per matrix via :mod:`repro.tune` — measured on this
         device, cached in ``tune_cache_dir`` so warm processes skip the
@@ -76,17 +81,32 @@ class SpMV:
         (default) raises :class:`~repro.core.validate.InputError` on
         out-of-range indices or non-finite values, ``"repair"`` drops or
         combines them into a canonical matrix (report on
-        ``.validation``), ``"off"`` skips the checks."""
+        ``.validation``), ``"off"`` skips the checks.
+
+        ``mesh=`` / ``shards=`` select sharded multi-device execution
+        (DESIGN.md §10): the plan is partitioned along row ranges and
+        each shard's subtree runs on its own mesh device, bitwise-equal
+        to single-device execution.  Under ``backend="auto"`` the shard
+        count becomes a *tuned axis* (the space gains ``{1, shards}``
+        candidates and the measured winner decides); an explicit
+        ``mesh`` cannot be combined with the tuner."""
         seed = spmv_seed()
         rows, cols, vals, vreport = validation.validate_coo(
             rows, cols, np.asarray(vals), shape, policy=validate)
         access = {"row": rows, "col": cols}
         with validation.collect_degradations() as events:
             if backend == "auto" or tune:
+                # shards= is a legal tuned axis here (unlike the graph
+                # apps); an explicit mesh still conflicts with the tuner
                 check_auto_kwargs("SpMV.from_coo", backend=backend,
                                   fused=fused, stage_b=stage_b, cost=cost,
-                                  coalesce=coalesce)
+                                  coalesce=coalesce, mesh=mesh)
                 from repro.tune import autotune
+                shard_counts = None
+                if shards is not None:
+                    from repro.launch.mesh import make_shard_mesh
+                    make_shard_mesh(int(shards))   # validate, with recipe
+                    shard_counts = tuple(sorted({1, int(shards)}))
                 dt = vals.dtype if np.issubdtype(vals.dtype, np.inexact) \
                     else np.float32
                 x_ex = jnp.asarray(np.random.default_rng(0).standard_normal(
@@ -95,19 +115,34 @@ class SpMV:
                     seed, access, shape[0], shape[1], {"value": vals},
                     {"x": x_ex}, jnp.zeros(shape[0], dt),
                     lane_widths=(lane_width,),
+                    shard_counts=shard_counts,
                     tune_cache_dir=tune_cache_dir,
                     plan_cache_dir=plan_cache_dir)
                 app = cls(plan=plan, shape=shape, _run=run,
-                          dtype=vals.dtype, tuning=result)
+                          dtype=vals.dtype, tuning=result,
+                          mesh=getattr(run, "mesh", None),
+                          _shard_parts=tuple(getattr(run, "parts", ())))
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = _plan(seed, access, shape[0], shape[1], cost,
                              plan_cache_dir)
-                run = eng.make_executor(plan, {"value": vals},
-                                        backend=backend, fused=fused,
-                                        stage_b=stage_b, coalesce=coalesce)
+                parts = ()
+                if mesh is None:
+                    run = eng.make_executor(plan, {"value": vals},
+                                            backend=backend, fused=fused,
+                                            stage_b=stage_b,
+                                            coalesce=coalesce)
+                else:
+                    from repro.core import ir
+                    tree = ir.lower(plan, backend=backend, fused=fused,
+                                    stage_b=stage_b, coalesce=coalesce)
+                    parts = tuple(ir.partition_plan(tree, num_shards))
+                    run = eng.make_sharded_executor(
+                        parts, {"value": vals}, mesh)
                 app = cls(plan=plan, shape=shape, _run=run,
-                          dtype=vals.dtype)
+                          dtype=vals.dtype, mesh=mesh, _shard_parts=parts)
         app.validation = vreport
         app.degradations = tuple(events)
         return app
@@ -155,6 +190,9 @@ class PageRank:
     driver: str = "resident"
     validation: object | None = None    # ValidationReport from from_edges
     degradations: tuple = ()            # DegradationEvents from the build
+    # sharded execution (DESIGN.md §10)
+    mesh: object | None = None
+    _shard_parts: tuple = dataclasses.field(default=(), repr=False)
     # cached per-dtype zero out_init + compiled driver programs
     _zero: dict = dataclasses.field(default_factory=dict, repr=False)
     _progs: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -169,7 +207,8 @@ class PageRank:
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
                    driver: str = "resident",
-                   validate: str = "strict") -> "PageRank":
+                   validate: str = "strict",
+                   mesh=None, shards: int | None = None) -> "PageRank":
         src, dst, _, vreport = validation.validate_edges(
             src, dst, num_nodes, policy=validate)
         seed = pagerank_seed()
@@ -178,10 +217,12 @@ class PageRank:
         inv = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
         inv_j = jnp.asarray(inv, jnp.float32)
         tuning = None
+        shard_parts = ()
         with validation.collect_degradations() as events:
             if backend == "auto" or tune:
                 check_auto_kwargs("PageRank.from_edges", backend=backend,
-                                  fused=fused, cost=cost)
+                                  fused=fused, cost=cost, mesh=mesh,
+                                  shards=shards)
                 from repro.tune import autotune
                 rank_ex = jnp.full((num_nodes,), 1.0 / max(num_nodes, 1),
                                    jnp.float32)
@@ -193,16 +234,29 @@ class PageRank:
                     tune_cache_dir=tune_cache_dir,
                     plan_cache_dir=plan_cache_dir)
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = _plan(seed, access, num_nodes, num_nodes, cost,
                              plan_cache_dir)
-                run = eng.make_executor(plan, {}, backend=backend,
-                                        fused=fused)
-        return cls(plan=plan, num_nodes=num_nodes,
-                   inv_deg=inv_j,
-                   dangling=jnp.asarray(deg == 0),
-                   damping=damping, _run=run, tuning=tuning, driver=driver,
-                   validation=vreport, degradations=tuple(events))
+                if mesh is None:
+                    run = eng.make_executor(plan, {}, backend=backend,
+                                            fused=fused)
+                else:
+                    from repro.core import ir
+                    tree = ir.lower(plan, backend=backend, fused=fused)
+                    shard_parts = tuple(ir.partition_plan(tree, num_shards))
+                    run = eng.make_sharded_executor(shard_parts, {}, mesh)
+        app = cls(plan=plan, num_nodes=num_nodes,
+                  inv_deg=inv_j,
+                  dangling=jnp.asarray(deg == 0),
+                  damping=damping, _run=run, tuning=tuning, driver=driver,
+                  validation=vreport, degradations=tuple(events))
+        # mesh is still None on the tuner path (check_auto_kwargs rejects
+        # an explicit one there)
+        app.mesh = mesh
+        app._shard_parts = shard_parts
+        return app
 
     def _zero_init(self, dtype) -> jnp.ndarray:
         key = np.dtype(dtype).str
@@ -241,6 +295,53 @@ class PageRank:
                     + damping * (contrib + dangling_mass / n))
         return step
 
+    def _make_resident_shard(self):
+        """The sharded resident driver (DESIGN.md §10): rank lives
+        row-sharded as the padded ``(k, S)`` stack inside one jitted
+        ``fori_loop``; each iteration all-gathers the shard pieces into
+        the full rank vector and every device applies the damping fold to
+        its own rows.  Bitwise vs single-device: the dangling mass is
+        :func:`engine.tree_sum` over the SAME reassembled full vector on
+        every device (identical combine order to :meth:`_step`), never a
+        psum of per-shard partial sums."""
+        from repro.launch.sharding import row_sharding
+        parts = self._shard_parts
+        bodies = eng.shard_sweep_bodies(parts, {})
+        widths, s = eng.shard_widths(parts)
+        n = self.num_nodes
+        damping = self.damping
+        inv = self.inv_deg
+        dangling = self.dangling
+
+        def mk(j):
+            body = bodies[j]
+
+            def f(full_rank, local_prev):
+                contrib = body({"rank": full_rank, "inv_nneighbor": inv},
+                               jnp.zeros_like(local_prev))
+                mass = eng.tree_sum(jnp.where(dangling, full_rank, 0.0))
+                return ((1.0 - damping) / n
+                        + damping * (contrib + mass / n))
+            return f
+
+        step = eng.make_sharded_fixpoint_step(
+            parts, {}, self.mesh, "rank",
+            local_steps=[mk(j) for j in range(len(parts))],
+            with_convergence=False)
+        placement = row_sharding(self.mesh)
+
+        def whole_run(padded0, num_iters):
+            return jax.lax.fori_loop(0, num_iters, lambda _i, p: step(p),
+                                     padded0)
+        jprog = jax.jit(whole_run, donate_argnums=(0,))
+
+        def prog(rank0, num_iters):
+            padded = jax.device_put(eng.pad_rows(rank0, widths, s),
+                                    placement)
+            return eng.unpad_rows(jprog(padded, num_iters), widths)
+        self._progs["resident_shard"] = prog
+        return prog
+
     def run(self, iters: int = 20, driver: str | None = None) -> jnp.ndarray:
         """``iters`` power iterations from the uniform distribution.
 
@@ -252,6 +353,10 @@ class PageRank:
         driver = driver or self.driver
         n = self.num_nodes
         rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+        if driver == "resident" and self._shard_parts:
+            prog = (self._progs.get("resident_shard")
+                    or self._make_resident_shard())
+            return prog(rank, jnp.asarray(iters, jnp.int32))
         if driver == "resident":
             prog = self._progs.get("resident")
             if prog is None:

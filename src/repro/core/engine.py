@@ -392,7 +392,7 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                  backend: str = "jax", interpret: bool | None = None,
                  fused: bool = True, stage_b: str = "auto",
                  elem_exec: Mapping[str, jnp.ndarray] | None = None,
-                 coalesce: bool = False):
+                 coalesce: bool = False, tree: ir.CodeTree | None = None):
     """The raw sweep body ``fn(mutable: dict, out_init) -> out`` — the same
     stage-A/stage-B program :func:`make_executor` jits, without the jit
     boundary, for embedding inside ``lax.while_loop`` / ``fori_loop``
@@ -409,12 +409,25 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     closes over device arrays and re-uploads nothing.  Because the
     standalone executor is literally ``jax.jit`` of this function, a
     resident loop iteration is bitwise identical to a standalone executor
-    call."""
+    call.
+
+    ``tree`` optionally supplies an ALREADY-LOWERED code tree (its plan
+    must be ``plan``) and skips the internal :func:`repro.core.ir.lower`
+    — the emission path of the partitioned per-shard subtrees
+    (:func:`repro.core.ir.partition_plan`), whose launch lists were
+    sliced, not re-lowered."""
     seed = plan.seed
+    if tree is None:
+        tree = ir.lower(plan, backend=backend, fused=fused,
+                        stage_b=stage_b, coalesce=coalesce)
+    elif tree.plan is not plan:
+        raise ValueError("make_sweeper: tree.plan must be the given plan")
+    elif tree.backend != backend:
+        raise ValueError(
+            f"make_sweeper: tree was lowered for backend "
+            f"{tree.backend!r}, emitter asked for {backend!r}")
     if elem_exec is None:
         elem_exec = reorder_static(plan, static_data)
-    tree = ir.lower(plan, backend=backend, fused=fused, stage_b=stage_b,
-                    coalesce=coalesce)
     meta = {
         "window_ids": jnp.asarray(plan.window_ids),
         "lane_slot": jnp.asarray(plan.lane_slot),
@@ -511,7 +524,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                   fused: bool = True, stage_b: str = "auto",
                   fuse_classes: bool | None = None,
                   elem_exec: Mapping[str, jnp.ndarray] | None = None,
-                  donate: bool = False, coalesce: bool = False):
+                  donate: bool = False, coalesce: bool = False,
+                  tree: ir.CodeTree | None = None):
     """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
 
     ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
@@ -547,10 +561,209 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         fused = fuse_classes
     body = make_sweeper(plan, static_data, backend=backend,
                         interpret=interpret, fused=fused, stage_b=stage_b,
-                        elem_exec=elem_exec, coalesce=coalesce)
+                        elem_exec=elem_exec, coalesce=coalesce, tree=tree)
     run = jax.jit(body, donate_argnums=(1,) if donate else ())
     run.sweep_body = body
     return run
+
+
+# ------------------------------------------------------ sharded emitters
+# One mesh, one plan per shard (DESIGN.md §10): the emitters below run
+# the per-shard subtrees of ir.partition_plan under shard_map over a
+# named mesh.  Public interfaces stay FULL-ARRAY (pad/shard on entry,
+# unpad on exit, all inside one jit), so a sharded executor is a drop-in
+# replacement for a single-device one — same oracle checks, same tuner
+# measurement harness, bitwise-equal outputs.
+try:
+    from jax import shard_map as _shard_map
+except ImportError:        # older jax: pre-stabilization location
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import PartitionSpec as _PS
+
+
+def _shard_axis(mesh) -> str:
+    """The mesh axis shard rows ride on — the data-parallel axis."""
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+    if len(dp) != 1:
+        raise ValueError(
+            f"sharded execution needs exactly one data axis in the mesh "
+            f"(axes {mesh.axis_names}, data axes {dp}); build one with "
+            "repro.launch.mesh.make_shard_mesh(shards)")
+    if int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                    if a not in dp])) != 1:
+        raise ValueError(
+            f"sharded execution replicates over non-data axes; mesh "
+            f"{dict(mesh.shape)} has a non-trivial model axis")
+    return dp[0]
+
+
+def _check_parts(parts, mesh) -> str:
+    axis = _shard_axis(mesh)
+    k = int(mesh.shape[axis])
+    if len(parts) != k:
+        raise ValueError(
+            f"{len(parts)} plan shards over a {k}-device '{axis}' axis; "
+            "partition_plan(tree, shards) must match the mesh")
+    if parts and parts[0].tree.backend == "pallas":
+        raise ValueError("sharded execution supports the jax/segsum "
+                         "backends (Pallas kernels are single-device)")
+    return axis
+
+
+def shard_widths(parts) -> tuple[list[int], int]:
+    """Per-shard row counts and the common padded width S (>= 1)."""
+    widths = [p.num_rows for p in parts]
+    return widths, max(max(widths), 1)
+
+
+def pad_rows(state: jnp.ndarray, widths: list[int], s: int) -> jnp.ndarray:
+    """(n, ...) full array -> (k, S, ...) stacked per-shard rows, each
+    shard's slice zero-padded to S.  Pads are CONSTANT zeros in every
+    sweep (the emitters re-pad with zeros), so padded-state equality is
+    exactly full-state equality — the sharded convergence check leans on
+    this."""
+    pieces, lo = [], 0
+    for w in widths:
+        piece = state[lo:lo + w]
+        pad = ((0, s - w),) + ((0, 0),) * (state.ndim - 1)
+        pieces.append(jnp.pad(piece, pad))
+        lo += w
+    return jnp.stack(pieces)
+
+
+def unpad_rows(padded: jnp.ndarray, widths: list[int]) -> jnp.ndarray:
+    """(k, S, ...) -> (n, ...): drop each shard's pad rows and concat."""
+    return jnp.concatenate([padded[i, :w] for i, w in enumerate(widths)],
+                           axis=0)
+
+
+def shard_sweep_bodies(parts, static_data):
+    """One sweep body per shard (empty shards -> identity).  Elementwise
+    arrays stay FULL-LENGTH: each shard's sliced ``flat_perm`` holds
+    global nnz positions, so the per-shard Data Transfer reorders the
+    same full arrays the parent would (the parent's own ``elem_exec``
+    cannot be shared — it is already block-reordered)."""
+    bodies = []
+    for p in parts:
+        if p.num_blocks == 0 or p.tree.plan.head_pos.size == 0:
+            bodies.append(lambda mutable, out_init: out_init)
+            continue
+        bodies.append(make_sweeper(p.tree.plan, static_data,
+                                   backend=p.tree.backend, tree=p.tree))
+    return bodies
+
+
+def _pad_to(y: jnp.ndarray, s: int) -> jnp.ndarray:
+    return jnp.pad(y, ((0, s - y.shape[0]),) + ((0, 0),) * (y.ndim - 1))
+
+
+def make_sharded_executor(parts, static_data, mesh, *,
+                          donate: bool = False):
+    """Placement-parameterized executor over a partitioned plan:
+    ``run(mutable, out_init)`` with FULL arrays, executing shard ``i``'s
+    subtree on mesh device ``i`` under ``shard_map``.
+
+    The mutable gathered inputs are replicated (every shard gathers
+    through GLOBAL indices); ``out_init`` is row-sharded.  Device ``i``
+    selects its shard's program with ``lax.switch(axis_index)`` — every
+    branch pads its rows to the common width S so the switch is
+    shape-legal.  Bitwise: each output row runs the parent's identical
+    block program and per-row combine tree (ir.partition_plan), so the
+    result equals single-device execution bit for bit."""
+    axis = _check_parts(parts, mesh)
+    widths, s = shard_widths(parts)
+    k = len(parts)
+    bodies = shard_sweep_bodies(parts, static_data)
+
+    def device_fn(mutable, block):          # block: (1, S, ...) local
+        def branch(j):
+            def f(mut, blk):
+                if widths[j] == 0:
+                    return blk
+                y = bodies[j](mut, blk[0, :widths[j]])
+                return _pad_to(y, s)[None]
+            return f
+        i = jax.lax.axis_index(axis)
+        return jax.lax.switch(i, [branch(j) for j in range(k)],
+                              mutable, block)
+
+    def run_full(mutable, out_init):
+        mut_spec = jax.tree.map(lambda _: _PS(), mutable)
+        padded = pad_rows(out_init, widths, s)
+        y = _shard_map(device_fn, mesh=mesh,
+                       in_specs=(mut_spec, _PS(axis)),
+                       out_specs=_PS(axis))(mutable, padded)
+        return unpad_rows(y, widths)
+
+    run = jax.jit(run_full, donate_argnums=(1,) if donate else ())
+    run.sweep_body = run_full
+    run.parts = parts
+    run.mesh = mesh
+    return run
+
+
+def make_sharded_fixpoint_step(parts, static_data, mesh, state_key: str,
+                               *, local_steps=None,
+                               with_convergence: bool = True):
+    """The sharded resident sweep ``step(padded_state) -> ...`` for
+    fixpoint drivers (DESIGN.md §7/§10): state lives row-sharded as the
+    padded ``(k, S, ...)`` stack, each sweep ``all_gather``s the shard
+    pieces into the full dense input vector, runs the local subtree on
+    the shard's own rows (fold semantics: ``out_init`` is the shard's
+    previous rows), and re-pads.  With ``with_convergence`` the step
+    also returns replicated device-side ``(changed, healthy)`` scalars —
+    ``psum`` of the per-shard ``array_equal`` / ``state_healthy``
+    verdicts, so convergence needs no host round-trip and no full-state
+    rebuild outside the loop.
+
+    ``local_steps`` optionally overrides the per-shard body: a list of
+    ``f_j(full_state, local_rows) -> new_local_rows`` (PageRank's damping
+    fold wraps the contribution sweep this way)."""
+    axis = _check_parts(parts, mesh)
+    widths, s = shard_widths(parts)
+    k = len(parts)
+    reduce = parts[0].tree.plan.seed.reduce
+    if local_steps is None:
+        bodies = shard_sweep_bodies(parts, static_data)
+        local_steps = [
+            (lambda j: lambda full, local:
+             bodies[j]({state_key: full}, local))(j) for j in range(k)]
+
+    def device_fn(block):                    # (1, S, ...) local rows
+        pieces = jax.lax.all_gather(block[0], axis)       # (k, S, ...)
+        full = unpad_rows(pieces, widths)                 # (n, ...)
+
+        def branch(j):
+            def f(blk):
+                if widths[j] == 0:
+                    return blk
+                new = local_steps[j](full, blk[0, :widths[j]])
+                return _pad_to(new, s)[None]
+            return f
+        i = jax.lax.axis_index(axis)
+        new = jax.lax.switch(i, [branch(j) for j in range(k)], block)
+        if not with_convergence:
+            return new
+        # ISSUE/DESIGN §10: device-side convergence via psum of the
+        # per-shard verdicts — both scalars replicate across the axis
+        changed_here = jnp.logical_not(jnp.array_equal(new, block))
+        changed = jax.lax.psum(changed_here.astype(jnp.int32), axis) > 0
+        sick_here = jnp.logical_not(state_healthy(new, reduce))
+        healthy = jax.lax.psum(sick_here.astype(jnp.int32), axis) == 0
+        return new, changed, healthy
+
+    out_specs = (_PS(axis), _PS(), _PS()) if with_convergence \
+        else _PS(axis)
+    mapped = _shard_map(device_fn, mesh=mesh, in_specs=_PS(axis),
+                        out_specs=out_specs)
+
+    def step(padded_state):
+        return mapped(padded_state)
+    step.widths = widths
+    step.padded_width = s
+    step.axis = axis
+    return step
 
 
 def make_baseline_gather(seed: CodeSeed, access: Mapping[str, np.ndarray],

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import ir
 from repro.core import validate as validation
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import CodeSeed
@@ -202,6 +203,13 @@ class _FixpointApp:
         default_factory=ConvergenceReport)
     validation: object | None = None    # ValidationReport from from_edges
     degradations: tuple = ()            # DegradationEvents from the build
+    # sharded execution (DESIGN.md §10): the mesh the app was built for
+    # (None = single device), the per-shard plan subtrees, and the static
+    # elementwise inputs (the sharded fixpoint step re-derives per-shard
+    # sweep bodies from these)
+    mesh: object | None = None
+    _shard_parts: tuple = dataclasses.field(default=(), repr=False)
+    _static: dict = dataclasses.field(default_factory=dict, repr=False)
     # jitted resident converge programs, keyed by single/batched step
     _resident: dict = dataclasses.field(default_factory=dict, repr=False)
 
@@ -277,6 +285,55 @@ class _FixpointApp:
             self._resident[batched] = fn
         return fn
 
+    def _resident_converge_sharded(self):
+        """Sharded resident convergence (DESIGN.md §10): the while_loop
+        carries ROW-SHARDED padded state ``(k, S)`` placed by
+        ``row_sharding``; each iteration all-gathers the shard pieces,
+        reassembles the full previous state, runs every shard's local
+        sweep, and psum-reduces per-shard ``array_equal``/health flags —
+        the loop structure and carry are otherwise byte-for-byte the
+        single-device resident driver's, so sweep counts and terminal
+        flags match exactly."""
+        fn = self._resident.get("shard")
+        if fn is None:
+            from repro.launch.sharding import row_sharding
+            step = eng.make_sharded_fixpoint_step(
+                self._shard_parts, self._static, self.mesh, self._state_key)
+            widths, s = step.widths, step.padded_width
+            reduce = self.plan.seed.reduce
+            placement = row_sharding(self.mesh)
+
+            def converge(padded, max_sweeps):
+                def cond(carry):
+                    _state, count, changed, healthy = carry
+                    return jnp.logical_and(
+                        jnp.logical_and(changed, healthy),
+                        count < max_sweeps)
+
+                def body(carry):
+                    state, count, _changed, _healthy = carry
+                    new, changed, healthy = step(state)
+                    return (new, count + jnp.int32(1), changed, healthy)
+
+                # pad lanes are constant zeros (pad_rows), so the initial
+                # health check over the padded block equals the full-state
+                # check: zeros are finite and never the wrong-direction
+                # infinity state_healthy rejects
+                init = (padded, jnp.int32(0), jnp.bool_(True),
+                        eng.state_healthy(padded, reduce))
+                return jax.lax.while_loop(cond, body, init)
+
+            jfn = jax.jit(converge)
+
+            def fn(state, max_sweeps):
+                padded = jax.device_put(
+                    eng.pad_rows(state, widths, s), placement)
+                final, count, changed, healthy = jfn(padded, max_sweeps)
+                return eng.unpad_rows(final, widths), count, changed, healthy
+
+            self._resident["shard"] = fn
+        return fn
+
     def _report(self, sweeps: int, changed: bool, healthy: bool,
                 max_sweeps: int) -> ConvergenceReport:
         """Fold a run's terminal carry into a :class:`ConvergenceReport`
@@ -309,6 +366,18 @@ class _FixpointApp:
         if step is not None:
             driver = "host"
         self.convergence = ConvergenceReport()
+        if self._shard_parts and batched:
+            raise NotImplementedError(
+                "batched multi-source runs are not supported on a sharded "
+                "app (vmap over shard_map); build without mesh=/shards= "
+                "for run_multi")
+        if driver == "resident" and self._shard_parts:
+            fn = self._resident_converge_sharded()
+            final, count, changed, healthy = fn(
+                state, jnp.asarray(max_sweeps, jnp.int32))
+            self.convergence = self._report(int(count), bool(changed),
+                                            bool(healthy), max_sweeps)
+            return final
         if driver == "resident":
             fn = self._resident_converge(batched)
             final, count, changed, healthy = fn(
@@ -352,10 +421,26 @@ def _executor_kwargs(backend, fused, stage_b, interpret):
     return kw
 
 
+def _make_fixpoint_run(plan, static, backend, fused, stage_b, interpret,
+                       mesh, num_shards):
+    """Build the sweep program for a graph app: the single-device jitted
+    executor when ``mesh`` is None, else the sharded full-array executor
+    over the mesh (DESIGN.md §10).  Returns ``(run, shard_parts)`` —
+    ``shard_parts`` is ``()`` on the single-device path."""
+    if mesh is None:
+        run = eng.make_executor(plan, static, **_executor_kwargs(
+            backend, fused, stage_b, interpret))
+        return run, ()
+    tree = ir.lower(plan, backend=backend, fused=fused, stage_b=stage_b)
+    parts = ir.partition_plan(tree, num_shards)
+    return eng.make_sharded_executor(parts, static, mesh), tuple(parts)
+
+
 def check_auto_kwargs(name: str, *, backend: str = "auto",
                       fused: bool = True, stage_b: str = "auto",
                       cost=None, interpret: bool | None = None,
-                      coalesce: bool = False) -> None:
+                      coalesce: bool = False, mesh=None,
+                      shards: int | None = None) -> None:
     """``backend="auto"`` / ``tune=True`` hand variant selection to the
     tuner — an explicit ``fused`` / ``stage_b`` / ``cost`` / ``interpret``
     (or a non-default backend next to ``tune=True``) alongside it used to
@@ -378,6 +463,13 @@ def check_auto_kwargs(name: str, *, backend: str = "auto",
         conflicts.append("interpret")
     if coalesce is not False:
         conflicts.append("coalesce")
+    # an explicit mesh pins placement, but the tuner owns placement when a
+    # shard-count axis is in play; graph apps additionally reject shards=
+    # here (their tuner has no shard axis — SpMV/SpMM carry that)
+    if mesh is not None:
+        conflicts.append("mesh")
+    if shards is not None:
+        conflicts.append("shards")
     if conflicts:
         raise ValueError(
             f"{name}: backend='auto'/tune=True selects the execution "
@@ -405,7 +497,8 @@ class BFS(_FixpointApp):
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
                    driver: str = "resident",
-                   validate: str = "strict") -> "BFS":
+                   validate: str = "strict",
+                   mesh=None, shards: int | None = None) -> "BFS":
         seed = bfs_seed()
         src, dst, _, vreport = validation.validate_edges(
             src, dst, num_nodes, policy=validate)
@@ -414,7 +507,8 @@ class BFS(_FixpointApp):
             if backend == "auto" or tune:
                 check_auto_kwargs("BFS.from_edges", backend=backend,
                                   fused=fused, stage_b=stage_b, cost=cost,
-                                  interpret=interpret)
+                                  interpret=interpret, mesh=mesh,
+                                  shards=shards)
                 lv = np.full(num_nodes, UNREACHED, np.int32)
                 lv[0] = 0
                 plan, run, tuning = _autotune_build(
@@ -424,13 +518,17 @@ class BFS(_FixpointApp):
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
                           _state_key="level", tuning=tuning, driver=driver)
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = _build(seed, access, num_nodes, num_nodes, cost,
                               plan_cache_dir)
-                run = eng.make_executor(plan, {}, **_executor_kwargs(
-                    backend, fused, stage_b, interpret))
+                run, parts = _make_fixpoint_run(
+                    plan, {}, backend, fused, stage_b, interpret,
+                    mesh, num_shards)
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
-                          _state_key="level", driver=driver)
+                          _state_key="level", driver=driver, mesh=mesh,
+                          _shard_parts=parts)
         app.validation = vreport
         app.degradations = tuple(events)
         return app
@@ -492,7 +590,8 @@ class SSSP(_FixpointApp):
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
                    driver: str = "resident",
-                   validate: str = "strict") -> "SSSP":
+                   validate: str = "strict",
+                   mesh=None, shards: int | None = None) -> "SSSP":
         seed = sssp_seed()
         src, dst, weight, vreport = validation.validate_edges(
             src, dst, num_nodes, weight=weight, policy=validate)
@@ -502,7 +601,8 @@ class SSSP(_FixpointApp):
             if backend == "auto" or tune:
                 check_auto_kwargs("SSSP.from_edges", backend=backend,
                                   fused=fused, stage_b=stage_b, cost=cost,
-                                  interpret=interpret)
+                                  interpret=interpret, mesh=mesh,
+                                  shards=shards)
                 d0 = np.full(num_nodes, np.inf, np.float32)
                 d0[0] = 0.0
                 plan, run, tuning = _autotune_build(
@@ -512,14 +612,17 @@ class SSSP(_FixpointApp):
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
                           _state_key="dist", tuning=tuning, driver=driver)
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = _build(seed, access, num_nodes, num_nodes, cost,
                               plan_cache_dir)
-                run = eng.make_executor(
-                    plan, static,
-                    **_executor_kwargs(backend, fused, stage_b, interpret))
+                run, parts = _make_fixpoint_run(
+                    plan, static, backend, fused, stage_b, interpret,
+                    mesh, num_shards)
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
-                          _state_key="dist", driver=driver)
+                          _state_key="dist", driver=driver, mesh=mesh,
+                          _shard_parts=parts, _static=static)
         app.validation = vreport
         app.degradations = tuple(events)
         return app
@@ -549,7 +652,8 @@ class ConnectedComponents(_FixpointApp):
                    tune: bool = False,
                    tune_cache_dir: str | None = None,
                    driver: str = "resident",
-                   validate: str = "strict"
+                   validate: str = "strict",
+                   mesh=None, shards: int | None = None
                    ) -> "ConnectedComponents":
         seed = cc_seed()
         src, dst, _, vreport = validation.validate_edges(
@@ -562,7 +666,8 @@ class ConnectedComponents(_FixpointApp):
                 check_auto_kwargs("ConnectedComponents.from_edges",
                                   backend=backend, fused=fused,
                                   stage_b=stage_b, cost=cost,
-                                  interpret=interpret)
+                                  interpret=interpret, mesh=mesh,
+                                  shards=shards)
                 labels = jnp.arange(num_nodes, dtype=jnp.int32)
                 plan, run, tuning = _autotune_build(
                     seed, access, num_nodes, {}, "label", labels,
@@ -571,13 +676,17 @@ class ConnectedComponents(_FixpointApp):
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
                           _state_key="label", tuning=tuning, driver=driver)
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = _build(seed, access, num_nodes, num_nodes, cost,
                               plan_cache_dir)
-                run = eng.make_executor(plan, {}, **_executor_kwargs(
-                    backend, fused, stage_b, interpret))
+                run, parts = _make_fixpoint_run(
+                    plan, {}, backend, fused, stage_b, interpret,
+                    mesh, num_shards)
                 app = cls(plan=plan, num_nodes=num_nodes, _run=run,
-                          _state_key="label", driver=driver)
+                          _state_key="label", driver=driver, mesh=mesh,
+                          _shard_parts=parts)
         app.validation = vreport
         app.degradations = tuple(events)
         return app

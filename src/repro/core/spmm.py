@@ -43,6 +43,9 @@ class SpMM:
     tuning: object | None = None   # TuningResult when built via backend="auto"
     validation: object | None = None    # ValidationReport from from_coo
     degradations: tuple = ()            # DegradationEvents from the build
+    # sharded execution (DESIGN.md §10)
+    mesh: object | None = None
+    _shard_parts: tuple = dataclasses.field(default=(), repr=False)
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -56,7 +59,8 @@ class SpMM:
                  plan_cache_dir: str | None = None,
                  tune: bool = False,
                  tune_cache_dir: str | None = None,
-                 validate: str = "strict") -> "SpMM":
+                 validate: str = "strict",
+                 mesh=None, shards: int | None = None) -> "SpMM":
         from repro.core import planio
         if backend not in _BACKENDS:
             raise ValueError(
@@ -73,12 +77,19 @@ class SpMM:
         with validation.collect_degradations() as events:
             if backend == "auto" or tune:
                 from repro.core.graphs import check_auto_kwargs
+                # shards= is a tuned axis (as in SpMV); mesh= conflicts
                 check_auto_kwargs("SpMM.from_coo", backend=backend,
                                   fused=fused, stage_b=stage_b, cost=cost,
-                                  coalesce=coalesce)
+                                  coalesce=coalesce, mesh=mesh)
                 from repro.tune import autotune, candidate_space
+                shard_counts = (1,)
+                if shards is not None:
+                    from repro.launch.mesh import make_shard_mesh
+                    make_shard_mesh(int(shards))   # validate, with recipe
+                    shard_counts = tuple(sorted({1, int(shards)}))
                 space = [c for c in candidate_space(
-                            seed, lane_widths=(lane_width,))
+                            seed, lane_widths=(lane_width,),
+                            shard_counts=shard_counts)
                          if c.backend != "pallas"]
                 rng = np.random.default_rng(0)
                 b_ex = jnp.asarray(rng.standard_normal(
@@ -92,17 +103,31 @@ class SpMM:
                     plan_cache_dir=plan_cache_dir,
                     cache_extra="spmm:d8")
                 app = cls(plan=plan, shape=shape, _run=run, reduce=reduce,
-                          tuning=result)
+                          tuning=result, mesh=getattr(run, "mesh", None),
+                          _shard_parts=tuple(getattr(run, "parts", ())))
             else:
+                from repro.launch.mesh import resolve_shard_mesh
+                mesh, num_shards = resolve_shard_mesh(mesh, shards)
                 cost = cost or CostModel(lane_width=lane_width)
                 plan = planio.cached_build_plan(seed, access,
                                                 out_len=shape[0],
                                                 data_len=shape[1], cost=cost,
                                                 cache_dir=plan_cache_dir)
-                run = eng.make_executor(plan, {"value": vals},
-                                        backend=backend, fused=fused,
-                                        stage_b=stage_b, coalesce=coalesce)
-                app = cls(plan=plan, shape=shape, _run=run, reduce=reduce)
+                parts = ()
+                if mesh is None:
+                    run = eng.make_executor(plan, {"value": vals},
+                                            backend=backend, fused=fused,
+                                            stage_b=stage_b,
+                                            coalesce=coalesce)
+                else:
+                    from repro.core import ir
+                    tree = ir.lower(plan, backend=backend, fused=fused,
+                                    stage_b=stage_b, coalesce=coalesce)
+                    parts = tuple(ir.partition_plan(tree, num_shards))
+                    run = eng.make_sharded_executor(
+                        parts, {"value": vals}, mesh)
+                app = cls(plan=plan, shape=shape, _run=run, reduce=reduce,
+                          mesh=mesh, _shard_parts=parts)
         app.validation = vreport
         app.degradations = tuple(events)
         return app

@@ -18,15 +18,78 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int | None = None, model: int = 1):
-    """Mesh over whatever devices exist (tests / single-host training)."""
+def make_local_mesh(data: int | None = None, model: int = 1,
+                    allow_subset: bool = False):
+    """Mesh over the local devices (tests / single-host training).
+
+    The mesh must account for EVERY visible device: a shape that covers
+    only some of them used to silently drop the remainder (training then
+    ran at a fraction of the machine with no sign why) — it now raises a
+    ValueError naming the dropped devices.  ``allow_subset=True`` is the
+    explicit opt-in for deliberately smaller meshes (e.g. benchmarking
+    shard counts {1, 2, 4} on an 8-device host)."""
     n = len(jax.devices())
     if data is None:
         data = n // model
-    devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    used = data * model
+    if used > n:
+        raise ValueError(
+            f"mesh shape ({data} data x {model} model) needs {used} "
+            f"devices but only {n} exist")
+    if used < n and not allow_subset:
+        raise ValueError(
+            f"mesh shape ({data} data x {model} model) covers {used} of "
+            f"{n} devices, silently dropping {n - used} "
+            f"({[str(d) for d in jax.devices()[used:]]}); use a shape "
+            "covering all devices, or pass allow_subset=True to opt in")
+    devices = np.asarray(jax.devices()[:used]).reshape(data, model)
     return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def make_shard_mesh(shards: int | None = None):
+    """The 1-D row-shard mesh of the sharded execution stack (DESIGN.md
+    §10): ``shards`` devices on the "data" axis (model axis trivial).
+    ``shards=None`` takes every visible device.  Raises with the CPU
+    simulation recipe when the host has too few devices."""
+    n = len(jax.devices())
+    if shards is None:
+        shards = n
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1 (got {shards})")
+    if shards > n:
+        raise ValueError(
+            f"shards={shards} but only {n} device(s) visible; on CPU, "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{shards} BEFORE importing jax to simulate a {shards}-device "
+            "mesh")
+    return make_local_mesh(data=shards, model=1, allow_subset=True)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axis names present in a mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_count(mesh) -> int:
+    """Number of row shards a mesh carries = product of its data axes."""
+    k = 1
+    for a in dp_axes(mesh):
+        k *= int(mesh.shape[a])
+    return k
+
+
+def resolve_shard_mesh(mesh=None, shards: int | None = None):
+    """Normalize the ``mesh=`` / ``shards=`` constructor surface of the
+    sharded apps: ``(None, None)`` selects the single-device stack
+    (returns ``(None, 1)``), ``shards`` alone builds the 1-D shard mesh,
+    and an explicit mesh is validated against ``shards`` when both are
+    given.  Returns ``(mesh_or_None, num_shards)``."""
+    if mesh is None and shards is None:
+        return None, 1
+    if mesh is None:
+        return make_shard_mesh(int(shards)), int(shards)
+    k = shard_count(mesh)
+    if shards is not None and int(shards) != k:
+        raise ValueError(f"shards={shards} does not match the mesh's "
+                         f"{k} data-axis device(s)")
+    return mesh, k

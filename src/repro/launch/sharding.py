@@ -111,6 +111,17 @@ def params_shardings(shd: Shd, axes_tree, values_tree=None):
     return tdef.unflatten(out)
 
 
+def row_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis row sharding over the mesh's data axes — the
+    placement of the padded ``(k, S, ...)`` fixpoint state in the
+    sharded execution stack (DESIGN.md §10): shard ``i``'s rows live on
+    data-axis device ``i`` between sweeps, so the resident loop never
+    rebuilds the full state on one device."""
+    from repro.launch.mesh import dp_axes
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, PS(dp if len(dp) > 1 else dp[0]))
+
+
 def batch_sharding(shd: Shd, batch_tree):
     """Shard every batch leaf on its leading (batch) dim (shape-aware:
     batch=1 long-context cells fall back to replicated)."""

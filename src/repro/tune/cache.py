@@ -13,6 +13,10 @@ digest over exactly those fields:
 * the platform (``cpu``/``tpu``/``gpu``) and ``jax.__version__`` — a
   choice measured on one device generation or XLA release must never be
   replayed on another,
+* the visible device count — a sharded choice (``Candidate.shards > 1``,
+  DESIGN.md §10) measured on an 8-device mesh must never poison the warm
+  cache of a single-device process (whose mesh build would fail on
+  replay), and vice versa,
 * the candidate-space signature, so widening the menu re-tunes.
 
 Entries are human-readable JSON (no optional deps), published with the
@@ -28,7 +32,7 @@ import os
 import tempfile
 import warnings
 
-SCHEMA = "tune.v1"
+SCHEMA = "tune.v2"
 
 
 def tuning_key(seed_name: str, reduce: str, access: dict, out_len: int,
@@ -38,7 +42,8 @@ def tuning_key(seed_name: str, reduce: str, access: dict, out_len: int,
     from repro.core import planio
     h = hashlib.blake2b(digest_size=16)
     h.update(f"{SCHEMA}|{seed_name}|{reduce}|{out_len}|{data_len}|"
-             f"{platform}|{jax.__version__}|{space_sig}|{extra}".encode())
+             f"{platform}|ndev{len(jax.devices())}|{jax.__version__}|"
+             f"{space_sig}|{extra}".encode())
     for k in sorted(access):
         h.update(f"|{k}|".encode())
         h.update(planio.array_fingerprint(access[k]))

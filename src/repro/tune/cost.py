@@ -40,6 +40,7 @@ DENSE_NS = 6.0            # stage-B dense scatter, per lane (incl. pads)
 SEGSUM_NS = 5.0           # single sorted segment reduce, per lane
 PALLAS_TPU_SCALE = 0.35   # VMEM/MXU path vs XLA-CPU per-lane work
 INTERPRET_SCALE = 200.0   # pallas interpret mode: debugging, never fast
+SHARD_COLLECTIVE_US = 25.0  # per-participant all-gather/psum exchange
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,7 +135,8 @@ def predict_us(c: Candidate, f: PlanFeatures, platform: str = "cpu"
     work scaled by the feature-table histograms.
     """
     if c.backend == "segsum":
-        return LAUNCH_US + f.lanes_total * SEGSUM_NS * 1e-3
+        us = LAUNCH_US + f.lanes_total * SEGSUM_NS * 1e-3
+        return _shard_scale(c, us)
     launches = (f.num_fused_launches if c.fused else f.num_classes)
     if c.backend == "pallas":
         launches = (f.num_pallas_sections if c.fused else f.num_classes)
@@ -143,7 +145,19 @@ def predict_us(c: Candidate, f: PlanFeatures, platform: str = "cpu"
           + _stage_b_us(c, f))
     if c.backend == "pallas":
         us *= PALLAS_TPU_SCALE if platform == "tpu" else INTERPRET_SCALE
-    return us
+    return _shard_scale(c, us)
+
+
+def _shard_scale(c: Candidate, us: float) -> float:
+    """Sharded execution (DESIGN.md §10): per-lane work runs concurrently
+    across the mesh (divide by shards — coarse: assumes the nnz-balanced
+    cuts landed even), while the per-sweep input exchange costs one
+    all-gather whose bill grows with participant count.  Single-device
+    candidates pass through untouched, keeping every pre-§10 ranking
+    bitwise stable."""
+    if c.shards <= 1:
+        return us
+    return us / c.shards + LAUNCH_US + SHARD_COLLECTIVE_US * c.shards
 
 
 def rank_candidates(candidates: list[Candidate],

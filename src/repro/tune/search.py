@@ -97,6 +97,19 @@ def _build_plan(seed, access, out_len, data_len, cand: Candidate,
 
 
 def _default_exec_factory(plan, cand: Candidate, static_data, elem_exec):
+    if cand.shards > 1:
+        # sharded candidates keep the full-array call contract, so the
+        # oracle check and the paired measurement treat them like any
+        # other executor; elem_exec is parent-plan-ordered and cannot
+        # seed the shard plans (each shard re-reorders the full static
+        # arrays through its own sliced flat_perm)
+        from repro.core import ir
+        from repro.launch.mesh import make_shard_mesh
+        tree = ir.lower(plan, backend=cand.backend, fused=cand.fused,
+                        stage_b=cand.stage_b, coalesce=cand.coalesce)
+        parts = ir.partition_plan(tree, cand.shards)
+        return eng.make_sharded_executor(parts, static_data,
+                                         make_shard_mesh(cand.shards))
     return eng.make_executor(plan, static_data, backend=cand.backend,
                              fused=cand.fused, stage_b=cand.stage_b,
                              elem_exec=elem_exec, coalesce=cand.coalesce)
@@ -228,6 +241,7 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
              static_data: dict, mutable_example: dict, out_init,
              *, space: list | None = None, platform: str | None = None,
              lane_widths: tuple | None = None,
+             shard_counts: tuple | None = None,
              top_k: int = 4, warmup: int = 1, iters: int = 5,
              tune_cache_dir: str | None = None,
              plan_cache_dir: str | None = None,
@@ -243,7 +257,10 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     derives the expected output from the seed's scatter oracle;
     pass an explicit array for custom executors, or ``None`` to skip the
     check.  ``force=True`` ignores (but still refreshes) the tuning
-    cache.
+    cache.  ``shard_counts`` widens the default space with a row-shard
+    axis (DESIGN.md §10); a sharded candidate's executor builds its own
+    1-D mesh and keeps the full-array call contract, so the oracle check
+    and the paired measurement need no special casing.
 
     ``measure_wrap(run) -> timed_callable`` changes what gets TIMED
     without changing what gets RETURNED or oracle-checked: the fixpoint
@@ -258,7 +275,8 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     if space is None:
         space = tspace.candidate_space(
             seed, platform=platform, allow_interpret=allow_interpret,
-            lane_widths=lane_widths if lane_widths else (128,))
+            lane_widths=lane_widths if lane_widths else (128,),
+            shard_counts=shard_counts if shard_counts else (1,))
     if not space:
         raise ValueError("empty candidate space")
     if exec_factory is None:
@@ -322,6 +340,14 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     space = [c for c in space if c.plan_key in plans]
 
     ranked = tcost.rank_candidates(space, features, platform, top_k=top_k)
+    # every shard count in the space must reach the measurement phase:
+    # the caller opened that axis explicitly, and the cost model's
+    # collective constant is far too coarse to close it analytically
+    missing = {c.shards for c in space} - {c.shards for c, _ in ranked}
+    if missing:
+        full = tcost.rank_candidates(space, features, platform, top_k=None)
+        ranked += [next(t for t in full if t[0].shards == k)
+                   for k in sorted(missing)]
 
     if oracle == "reference":
         data = dict(static_data)

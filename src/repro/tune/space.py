@@ -46,11 +46,14 @@ class Candidate:
     lane_width: int = 128
     max_windows_replace: int | None = None
     coalesce: bool = False             # ir.coalesce_gathers lowering pass
+    shards: int = 1                    # row shards over a device mesh (§10)
 
     @property
     def plan_key(self) -> tuple:
         """Candidates with equal plan keys share one BlockPlan (and the
-        reorder work that goes with it)."""
+        reorder work that goes with it).  ``shards`` is deliberately NOT
+        part of the key: every shard count partitions the same parent
+        plan (``ir.partition_plan`` slices, it never re-analyzes)."""
         return (self.lane_width, self.max_windows_replace)
 
     def cost_model(self) -> CostModel:
@@ -63,8 +66,9 @@ class Candidate:
         cut = ("" if self.max_windows_replace is None
                else f"/w{self.max_windows_replace}")
         co = "/co" if self.coalesce else ""
+        sh = f"/s{self.shards}" if self.shards > 1 else ""
         return (f"{self.backend}/{mode}/{self.stage_b}"
-                f"/n{self.lane_width}{cut}{co}")
+                f"/n{self.lane_width}{cut}{co}{sh}")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -95,8 +99,11 @@ def canonicalize(c: Candidate) -> Candidate:
 
 
 def is_valid(c: Candidate, seed: CodeSeed, platform: str,
-             allow_interpret: bool = False) -> bool:
-    """The platform/seed validity rules (module docstring)."""
+             allow_interpret: bool = False,
+             devices: int | None = None) -> bool:
+    """The platform/seed validity rules (module docstring).  ``devices``
+    (when given) caps the shard axis at the visible device count so the
+    tuner never measures a mesh it cannot build."""
     if c.backend not in _BACKENDS or c.stage_b not in _STAGE_BS:
         return False
     if c.lane_width < 2:
@@ -105,6 +112,14 @@ def is_valid(c: Candidate, seed: CodeSeed, platform: str,
         return False
     if c.backend == "segsum" and seed.reduce not in SEGMENT_REDUCES:
         return False
+    if c.shards < 1:
+        return False
+    if c.shards > 1 and c.backend == "pallas":
+        # partition_plan refuses pallas subtrees (shard_map over the
+        # kernel emitters is not wired)
+        return False
+    if devices is not None and c.shards > devices:
+        return False
     return True
 
 
@@ -112,6 +127,7 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
                     backends: tuple = _BACKENDS,
                     lane_widths: tuple = (128,),
                     window_cutoffs: tuple = (None,),
+                    shard_counts: tuple = (1,),
                     allow_interpret: bool = False) -> list["Candidate"]:
     """Enumerate the valid, canonical candidate list for ``seed`` on
     ``platform`` — the declarative product space filtered by
@@ -123,26 +139,31 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
     axis, which the search harness shares per :attr:`Candidate.plan_key`.
     """
     platform = platform or default_platform()
+    devices = None
+    if any(k > 1 for k in shard_counts):
+        import jax
+        devices = len(jax.devices())
     out: list[Candidate] = []
     seen: set[Candidate] = set()
     for n in lane_widths:
         for cut in window_cutoffs:
-            for backend in backends:
-                for fused in (True, False):
-                    for stage_b in _STAGE_BS:
-                        for coalesce in (False, True):
-                            c = Candidate(backend=backend, fused=fused,
-                                          stage_b=stage_b, lane_width=n,
-                                          max_windows_replace=cut,
-                                          coalesce=coalesce)
-                            if not is_valid(c, seed, platform,
-                                            allow_interpret):
-                                continue
-                            c = canonicalize(c)
-                            if c in seen:
-                                continue
-                            seen.add(c)
-                            out.append(c)
+            for k in shard_counts:
+                for backend in backends:
+                    for fused in (True, False):
+                        for stage_b in _STAGE_BS:
+                            for coalesce in (False, True):
+                                c = Candidate(backend=backend, fused=fused,
+                                              stage_b=stage_b, lane_width=n,
+                                              max_windows_replace=cut,
+                                              coalesce=coalesce, shards=k)
+                                if not is_valid(c, seed, platform,
+                                                allow_interpret, devices):
+                                    continue
+                                c = canonicalize(c)
+                                if c in seen:
+                                    continue
+                                seen.add(c)
+                                out.append(c)
     return out
 
 

@@ -15,7 +15,8 @@ import sys
 import pytest
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-_EXAMPLES = ("quickstart.py", "spmv_pagerank.py", "graph_apps.py")
+_EXAMPLES = ("quickstart.py", "spmv_pagerank.py", "graph_apps.py",
+             "sharded_spmv.py")
 
 
 def _run_example(name: str) -> subprocess.CompletedProcess:

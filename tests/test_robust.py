@@ -716,7 +716,8 @@ def test_concurrent_cache_writers(tmp_path):
     from repro.core import planio
     for f in plans:
         planio.load_plan(str(f))
+    from repro.tune import cache as tcache
     entry = json.loads(tunes[0].read_text())
-    assert entry["schema"] == "tune.v1" and "choice" in entry
+    assert entry["schema"] == tcache.SCHEMA and "choice" in entry
     assert not list(plan_dir.glob("*.tmp")) and \
         not list(tune_dir.glob("*.tmp"))
