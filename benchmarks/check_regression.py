@@ -44,6 +44,15 @@ exit code 2, so CI can tell "a speedup regressed" (exit 1) from "a bench
 silently stopped producing rows" (exit 2).  An unreadable or malformed
 JSON file is exit code 3 with a one-line message naming the file — never
 a traceback.
+
+Every row written by ``benchmarks.run`` carries measurement provenance
+(``platform``, ``device_count``, ``jax_version``, ``git_sha``).  When the
+baseline's and candidate's rows disagree on device kind or device count,
+the ratio table is apples-to-oranges and the guard exits with the
+distinct code 4 (``EXIT_ENV_DRIFT``) instead of judging it;
+``--allow-env-drift`` downgrades that to a printed note for intentional
+hardware migrations.  Baselines that predate the provenance fields are
+compared as before.
 """
 from __future__ import annotations
 
@@ -61,6 +70,12 @@ EXIT_OK = 0
 EXIT_REGRESSION = 1         # a matched row's speedup ratio fell
 EXIT_MISSING = 2            # --missing fail and baseline rows vanished
 EXIT_BAD_FILE = 3           # a JSON file is unreadable or malformed
+EXIT_ENV_DRIFT = 4          # baseline/candidate measured on different envs
+
+# per-row measurement-provenance fields stamped by benchmarks.run: a
+# ratio comparison across device kinds or device counts is meaningless,
+# so drift in these fields fails the guard (--allow-env-drift overrides)
+_PROVENANCE = ("platform", "device_count")
 
 
 class BadFileError(Exception):
@@ -157,12 +172,46 @@ def _check_resident_floor(new_payload: dict, floor: float
     return failures, checked
 
 
+def _provenance_set(payload: dict) -> set:
+    """The distinct (platform, device_count) combinations its rows were
+    measured under — empty for files that predate row provenance."""
+    out = set()
+    for row in payload.get("timings", []):
+        if any(k in row for k in _PROVENANCE):
+            out.add(tuple((k, row.get(k)) for k in _PROVENANCE))
+    return out
+
+
+def _check_env_drift(old_payload: dict, new_payload: dict, old_path: str,
+                     new_path: str) -> list:
+    """Compare per-row measurement provenance between the two files.
+    Returns drift records (empty when comparable).  A file whose rows
+    carry no provenance fields (pre-provenance baseline) is skipped —
+    the guard cannot prove drift it cannot see."""
+    old = _provenance_set(old_payload)
+    new = _provenance_set(new_payload)
+    if not old or not new:
+        return []
+    if old == new:
+        return []
+    drift = []
+    for side, path, vals in (("baseline", old_path, old - new),
+                             ("candidate", new_path, new - old)):
+        for v in sorted(vals, key=str):
+            env = ",".join(f"{k}={x}" for k, x in v)
+            print(f"ENV_DRIFT,{side},{path},{env}")
+            drift.append((side, path, env))
+    return drift
+
+
 def _check_pair(old_path: str, new_path: str, min_ratio: float,
-                min_resident_speedup: float) -> tuple[list, list, int, int]:
+                min_resident_speedup: float
+                ) -> tuple[list, list, list, int, int]:
     """One (baseline, candidate) comparison.  Returns
-    ``(failures, missing, rows_checked, floor_rows_checked)``."""
+    ``(failures, missing, drift, rows_checked, floor_rows_checked)``."""
     old_payload = _load(old_path)
     new_payload = _load(new_path)
+    drift = _check_env_drift(old_payload, new_payload, old_path, new_path)
     failures = []
     missing = []
     checked = 0
@@ -185,40 +234,63 @@ def _check_pair(old_path: str, new_path: str, min_ratio: float,
         # vanishing from the new file must not pass the floor vacuously
         failures.append(("resident_floor", "powerlaw/* (rows missing)",
                          min_resident_speedup, 0.0, 0.0))
-    return failures, missing, checked, floor_checked
+    return failures, missing, drift, checked, floor_checked
 
 
 def check_many(pairs: list[tuple[str, str]], min_ratio: float = 0.9,
                min_resident_speedup: float = 1.0,
-               missing: str = "warn") -> int:
+               missing: str = "warn",
+               allow_env_drift: bool = False) -> int:
     """Guard every ``(baseline, candidate)`` pair; print one summary
     table; return a single exit code (non-zero if ANY pair regressed).
 
     ``missing="warn"`` (default) reports baseline rows absent from the
     candidate without failing; ``missing="fail"`` returns the distinct
     ``EXIT_MISSING`` code for them (a real regression still dominates
-    with ``EXIT_REGRESSION``).  An unreadable/malformed file is
-    ``EXIT_BAD_FILE`` immediately."""
+    with ``EXIT_REGRESSION``).  Baseline and candidate rows measured on
+    different device kinds or visible device counts (the per-row
+    provenance ``benchmarks.run`` stamps) are not comparable: that is
+    ``EXIT_ENV_DRIFT`` — dominating even a regression, because the ratio
+    table is meaningless — unless ``allow_env_drift=True`` downgrades it
+    to a printed note (intentional hardware migrations).  A baseline
+    that predates the provenance fields is compared as before.  An
+    unreadable/malformed file is ``EXIT_BAD_FILE`` immediately."""
     if missing not in ("warn", "fail"):
         raise ValueError(f"missing={missing!r}; expected 'warn' or 'fail'")
-    failures, missing_rows, checked, floor_checked = [], [], 0, 0
+    failures, missing_rows, drift_rows = [], [], []
+    checked, floor_checked = 0, 0
     summary = []
     for old_path, new_path in pairs:
         print(f"== {old_path} -> {new_path} ==")
         try:
-            f, m, c, fc = _check_pair(old_path, new_path, min_ratio,
-                                      min_resident_speedup)
+            f, m, d, c, fc = _check_pair(old_path, new_path, min_ratio,
+                                         min_resident_speedup)
         except BadFileError as e:
             print(str(e), file=sys.stderr)
             return EXIT_BAD_FILE
         failures += f
         missing_rows += m
+        drift_rows += d
         checked += c
         floor_checked += fc
         summary.append((old_path, new_path, c, fc, len(f), len(m)))
     print("\npair,rows_checked,floor_rows,failures,missing")
     for old_path, new_path, c, fc, nf, nm in summary:
         print(f"{old_path}->{new_path},{c},{fc},{nf},{nm}")
+    if drift_rows:
+        if allow_env_drift:
+            print(f"regression_guard: {len(drift_rows)} provenance "
+                  "mismatch(es) ignored (--allow-env-drift)")
+        else:
+            print(f"\nregression_guard: baseline and candidate were "
+                  f"measured on different environments "
+                  f"({len(drift_rows)} mismatch(es)) — the speedup-ratio "
+                  "comparison is not meaningful; re-run the benchmark on "
+                  "the baseline's hardware, or pass --allow-env-drift "
+                  "for an intentional migration", file=sys.stderr)
+            for side, path, env in drift_rows:
+                print(f"  [{side}] {path}: {env}", file=sys.stderr)
+            return EXIT_ENV_DRIFT
     if failures:
         print(f"\nregression_guard: {len(failures)} row(s) failed:",
               file=sys.stderr)
@@ -248,10 +320,11 @@ def check_many(pairs: list[tuple[str, str]], min_ratio: float = 0.9,
 
 def check(old_path: str, new_path: str, min_ratio: float = 0.9,
           min_resident_speedup: float = 1.0,
-          missing: str = "warn") -> int:
+          missing: str = "warn", allow_env_drift: bool = False) -> int:
     """Single-pair form (kept for callers/tests of the original API)."""
     return check_many([(old_path, new_path)], min_ratio,
-                      min_resident_speedup, missing=missing)
+                      min_resident_speedup, missing=missing,
+                      allow_env_drift=allow_env_drift)
 
 
 def main() -> None:
@@ -270,13 +343,20 @@ def main() -> None:
                     help="baseline rows absent from the candidate: "
                          "'warn' (default) reports them, 'fail' exits "
                          f"with code {EXIT_MISSING}")
+    ap.add_argument("--allow-env-drift", action="store_true",
+                    help="compare anyway when baseline and candidate "
+                         "rows carry different measurement provenance "
+                         "(device kind / device count); without this "
+                         f"flag provenance drift exits with code "
+                         f"{EXIT_ENV_DRIFT}")
     args = ap.parse_args()
     if len(args.files) < 2 or len(args.files) % 2:
         ap.error("expected an even number of files: OLD NEW [OLD NEW ...]")
     pairs = list(zip(args.files[0::2], args.files[1::2]))
     sys.exit(check_many(pairs, args.min_ratio,
                         args.min_resident_speedup,
-                        missing=args.missing))
+                        missing=args.missing,
+                        allow_env_drift=args.allow_env_drift))
 
 
 if __name__ == "__main__":

@@ -30,8 +30,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
+
+
+def _git_sha() -> str | None:
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except Exception:
+        return None
 
 
 def _platform_info() -> dict:
@@ -41,15 +55,29 @@ def _platform_info() -> dict:
         "python": platform.python_version(),
         "jax": jax.__version__,
         "device": jax.devices()[0].platform,
+        "device_count": len(jax.devices()),
+        "git_sha": _git_sha(),
     }
 
 
 def _write_json(path: str, schema: str, scale: str, rows: list) -> None:
+    """Serialize the timing rows, stamping measurement provenance into
+    EVERY row (not just the payload header): ``check_regression``
+    compares rows from two different files, so each row must carry
+    enough context to detect an apples-to-oranges comparison (different
+    device kind or visible device count) on its own."""
+    info = _platform_info()
+    prov = {
+        "platform": info["device"],
+        "device_count": info["device_count"],
+        "jax_version": info["jax"],
+        "git_sha": info["git_sha"],
+    }
     payload = {
         "schema": schema,
         "scale": scale,
-        "platform": _platform_info(),
-        "timings": rows,
+        "platform": info,
+        "timings": [{**prov, **row} for row in rows],
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

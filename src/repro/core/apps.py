@@ -29,6 +29,7 @@ from repro.core import validate as validation
 from repro.core.graphs import check_auto_kwargs
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import pagerank_seed, spmv_seed
+from repro.obs import trace as _trace
 
 
 def _plan(seed, access, out_len, data_len, cost, plan_cache_dir):
@@ -90,6 +91,19 @@ class SpMV:
         count becomes a *tuned axis* (the space gains ``{1, shards}``
         candidates and the measured winner decides); an explicit
         ``mesh`` cannot be combined with the tuner."""
+        with _trace.span("app.spmv.build", backend=backend,
+                         nnz=int(np.asarray(vals).size)):
+            return cls._from_coo(
+                rows, cols, vals, shape, lane_width=lane_width,
+                backend=backend, cost=cost, fused=fused, stage_b=stage_b,
+                coalesce=coalesce, plan_cache_dir=plan_cache_dir,
+                tune=tune, tune_cache_dir=tune_cache_dir,
+                validate=validate, mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_coo(cls, rows, cols, vals, shape, *, lane_width, backend,
+                  cost, fused, stage_b, coalesce, plan_cache_dir, tune,
+                  tune_cache_dir, validate, mesh, shards) -> "SpMV":
         seed = spmv_seed()
         rows, cols, vals, vreport = validation.validate_coo(
             rows, cols, np.asarray(vals), shape, policy=validate)
@@ -177,6 +191,18 @@ class SpMV:
                                                    dtype=x.dtype)
         return self._run({"x": x}, y_init)
 
+    def report(self):
+        """Structured :class:`~repro.obs.profile.RunReport`: plan stats,
+        IR pass deltas, per-launch cost attribution (and the compiled
+        program's HLO-derived flops/bytes when XLA exposes them), tuning
+        choice, validation summary, and recorded degradations."""
+        from repro.obs.profile import build_report
+        dt = self.dtype if np.issubdtype(self.dtype, np.inexact) \
+            else np.float32
+        example = ({"x": jnp.zeros(self.shape[1], dt)},
+                   jnp.zeros(self.shape[0], dt))
+        return build_report(self, "SpMV", example=example)
+
 
 @dataclasses.dataclass
 class PageRank:
@@ -209,6 +235,20 @@ class PageRank:
                    driver: str = "resident",
                    validate: str = "strict",
                    mesh=None, shards: int | None = None) -> "PageRank":
+        with _trace.span("app.pagerank.build", backend=backend,
+                         num_nodes=num_nodes):
+            return cls._from_edges(
+                src, dst, num_nodes, damping=damping,
+                lane_width=lane_width, backend=backend, cost=cost,
+                fused=fused, plan_cache_dir=plan_cache_dir, tune=tune,
+                tune_cache_dir=tune_cache_dir, driver=driver,
+                validate=validate, mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_edges(cls, src, dst, num_nodes, *, damping, lane_width,
+                    backend, cost, fused, plan_cache_dir, tune,
+                    tune_cache_dir, driver, validate, mesh,
+                    shards) -> "PageRank":
         src, dst, _, vreport = validation.validate_edges(
             src, dst, num_nodes, policy=validate)
         seed = pagerank_seed()
@@ -350,6 +390,18 @@ class PageRank:
         donated into the loop, which double-buffers the carry in place.
         ``driver="host"`` dispatches one jitted iteration per step (the
         A/B baseline); both return bitwise-identical ranks."""
+        with _trace.span("pagerank.run", iters=iters,
+                         driver=driver or self.driver):
+            return self._run_impl(iters, driver)
+
+    def report(self):
+        """Structured :class:`~repro.obs.profile.RunReport`: plan stats,
+        IR pass deltas, per-launch cost attribution, tuning choice,
+        validation summary, and recorded degradations."""
+        from repro.obs.profile import build_report
+        return build_report(self, "PageRank")
+
+    def _run_impl(self, iters: int, driver: str | None) -> jnp.ndarray:
         driver = driver or self.driver
         n = self.num_nodes
         rank = jnp.full((n,), 1.0 / n, dtype=jnp.float32)

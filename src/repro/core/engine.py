@@ -68,6 +68,7 @@ from repro.core import ir
 from repro.core.plan import BlockPlan
 from repro.core.seed import (CodeSeed, reduce_identity_for,
                              reference_execute)
+from repro.obs import trace as _trace
 
 # lowering helpers re-exported for callers that inspect launch lists
 # (benchmarks, tune.cost, kernels.unroll_spmv) — implementations in ir.py
@@ -388,6 +389,7 @@ def reorder_static(plan: BlockPlan, static_data: Mapping[str, np.ndarray]
             for e in seed.elementwise}
 
 
+@_trace.traced("engine.build_sweeper")
 def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                  backend: str = "jax", interpret: bool | None = None,
                  fused: bool = True, stage_b: str = "auto",
@@ -457,6 +459,7 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
             lanes = _stage_a_jax(plan, meta, elem_exec, mutable, launches,
                                  co_meta)
             return write_back(plan, meta, lanes, out_init)
+        run.tree = tree
         return run
 
     if backend == "segsum":
@@ -501,6 +504,7 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
             term = seed.combine(vals)
             red = seg_reduce(term, rows_j, num_segments=plan.out_len + 1)
             return fold(out_init, red[:plan.out_len])
+        run_ss.tree = tree
         return run_ss
 
     if backend == "pallas":
@@ -514,6 +518,7 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         def run_pl(mutable, out_init):
             lanes = stage_a(mutable)
             return write_back(plan, meta, lanes, out_init)
+        run_pl.tree = tree
         return run_pl
 
     raise ValueError(f"unknown backend {backend!r}")
@@ -555,15 +560,31 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     with no donation hazard.
 
     The returned callable exposes the raw traceable body as
-    ``run.sweep_body`` (see :func:`make_sweeper`).
+    ``run.sweep_body``, the underlying jitted function as ``run.jitted``
+    (the profiler lowers it to HLO), and the lowered code tree as
+    ``run.tree`` (per-launch cost attribution, DESIGN.md §11).  With
+    tracing enabled each call emits an ``engine.execute`` span —
+    ``first_call=True`` marks the call that paid JIT compilation.
     """
     if fuse_classes is not None:      # legacy alias of the pre-fused API
         fused = fuse_classes
     body = make_sweeper(plan, static_data, backend=backend,
                         interpret=interpret, fused=fused, stage_b=stage_b,
                         elem_exec=elem_exec, coalesce=coalesce, tree=tree)
-    run = jax.jit(body, donate_argnums=(1,) if donate else ())
+    jitted = jax.jit(body, donate_argnums=(1,) if donate else ())
+
+    def run(mutable, out_init):
+        if not _trace.enabled():
+            return jitted(mutable, out_init)
+        first = not run._called
+        run._called = True
+        with _trace.span("engine.execute", backend=backend,
+                         first_call=first):
+            return jitted(mutable, out_init)
+    run._called = False
     run.sweep_body = body
+    run.jitted = jitted
+    run.tree = getattr(body, "tree", None)
     return run
 
 
@@ -696,8 +717,19 @@ def make_sharded_executor(parts, static_data, mesh, *,
                        out_specs=_PS(axis))(mutable, padded)
         return unpad_rows(y, widths)
 
-    run = jax.jit(run_full, donate_argnums=(1,) if donate else ())
+    jitted = jax.jit(run_full, donate_argnums=(1,) if donate else ())
+
+    def run(mutable, out_init):
+        if not _trace.enabled():
+            return jitted(mutable, out_init)
+        first = not run._called
+        run._called = True
+        with _trace.span("engine.execute", backend=parts[0].tree.backend,
+                         shards=k, first_call=first):
+            return jitted(mutable, out_init)
+    run._called = False
     run.sweep_body = run_full
+    run.jitted = jitted
     run.parts = parts
     run.mesh = mesh
     return run

@@ -47,6 +47,8 @@ from repro.core import ir
 from repro.core import validate as validation
 from repro.core.plan import BlockPlan, CostModel, build_plan
 from repro.core.seed import CodeSeed
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # int32 "infinity" for BFS levels / CC labels of unreached nodes: large
 # enough to dominate every real level (< num_nodes), small enough that
@@ -83,19 +85,17 @@ class ConvergenceReport:
     negative_cycle: bool = False
 
 
-_plan_builds = 0
-
-
 def plan_build_count() -> int:
     """Total ``build_plan`` invocations made by this module — benchmarks
-    and tests assert one per graph across all sweeps (plan reuse)."""
-    return _plan_builds
+    and tests assert one per graph across all sweeps (plan reuse).
+    Backed by the process-wide ``graphs.plan_builds`` counter in
+    :mod:`repro.obs.metrics` (this function is the stable re-export)."""
+    return int(_metrics.value("graphs.plan_builds"))
 
 
 def _build(seed: CodeSeed, access, out_len, data_len, cost,
            plan_cache_dir) -> BlockPlan:
-    global _plan_builds
-    _plan_builds += 1
+    _metrics.inc("graphs.plan_builds")
     if plan_cache_dir is None:
         return build_plan(seed, access, out_len, data_len, cost=cost)
     from repro.core import planio
@@ -128,7 +128,6 @@ def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
     either way: every candidate's single-sweep output is checked against
     the scatter oracle before its timing can compete."""
     from repro.tune import autotune
-    global _plan_builds
     measure_wrap = None
     cache_extra = ""
     if driver == "resident":
@@ -148,7 +147,7 @@ def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
         lane_widths=(lane_width,),
         plan_cache_dir=plan_cache_dir, tune_cache_dir=tune_cache_dir,
         measure_wrap=measure_wrap, cache_extra=cache_extra)
-    _plan_builds += result.plans_built
+    _metrics.inc("graphs.plan_builds", result.plans_built)
     return plan, run, result
 
 
@@ -348,9 +347,35 @@ class _FixpointApp:
                                  diverged=diverged, exhausted=exhausted,
                                  negative_cycle=negative_cycle)
 
+    def report(self):
+        """Structured :class:`~repro.obs.profile.RunReport` for this app:
+        plan stats, IR pass deltas, per-launch cost attribution, tuning
+        choice, degradations, and the last run's convergence story."""
+        from repro.obs.profile import build_report
+        return build_report(self, type(self).__name__,
+                            sweeps=self.convergence)
+
     def _converge(self, state: jnp.ndarray, max_sweeps: int | None,
                   step=None, driver: str | None = None,
                   batched: bool = False) -> jnp.ndarray:
+        """Traced entry point of the convergence driver — the actual loop
+        lives in :meth:`_converge_impl`; the span records how the run
+        ended (sweep count + terminal flag) on top of the per-sweep
+        ``engine.execute`` spans the host driver emits."""
+        with _trace.span("graphs.converge", app=type(self).__name__,
+                         driver=driver or self.driver,
+                         batched=batched) as sp:
+            out = self._converge_impl(state, max_sweeps, step=step,
+                                      driver=driver, batched=batched)
+            sp.set(sweeps=self.convergence.sweeps,
+                   converged=self.convergence.converged,
+                   diverged=self.convergence.diverged,
+                   exhausted=self.convergence.exhausted)
+            return out
+
+    def _converge_impl(self, state: jnp.ndarray, max_sweeps: int | None,
+                       step=None, driver: str | None = None,
+                       batched: bool = False) -> jnp.ndarray:
         """Iterate the sweep to exact fixpoint.  ``self.convergence``
         records how the run ended (:class:`ConvergenceReport`): a
         fixpoint (``converged``), a numerically unhealthy state caught
@@ -499,6 +524,20 @@ class BFS(_FixpointApp):
                    driver: str = "resident",
                    validate: str = "strict",
                    mesh=None, shards: int | None = None) -> "BFS":
+        with _trace.span("app.bfs.build", backend=backend,
+                         num_nodes=num_nodes):
+            return cls._from_edges(
+                src, dst, num_nodes, lane_width=lane_width,
+                backend=backend, cost=cost, fused=fused, stage_b=stage_b,
+                interpret=interpret, plan_cache_dir=plan_cache_dir,
+                tune=tune, tune_cache_dir=tune_cache_dir, driver=driver,
+                validate=validate, mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_edges(cls, src, dst, num_nodes, *, lane_width, backend,
+                    cost, fused, stage_b, interpret, plan_cache_dir,
+                    tune, tune_cache_dir, driver, validate, mesh,
+                    shards) -> "BFS":
         seed = bfs_seed()
         src, dst, _, vreport = validation.validate_edges(
             src, dst, num_nodes, policy=validate)
@@ -592,6 +631,20 @@ class SSSP(_FixpointApp):
                    driver: str = "resident",
                    validate: str = "strict",
                    mesh=None, shards: int | None = None) -> "SSSP":
+        with _trace.span("app.sssp.build", backend=backend,
+                         num_nodes=num_nodes):
+            return cls._from_edges(
+                src, dst, weight, num_nodes, lane_width=lane_width,
+                backend=backend, cost=cost, fused=fused, stage_b=stage_b,
+                interpret=interpret, plan_cache_dir=plan_cache_dir,
+                tune=tune, tune_cache_dir=tune_cache_dir, driver=driver,
+                validate=validate, mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_edges(cls, src, dst, weight, num_nodes, *, lane_width,
+                    backend, cost, fused, stage_b, interpret,
+                    plan_cache_dir, tune, tune_cache_dir, driver,
+                    validate, mesh, shards) -> "SSSP":
         seed = sssp_seed()
         src, dst, weight, vreport = validation.validate_edges(
             src, dst, num_nodes, weight=weight, policy=validate)
@@ -655,6 +708,20 @@ class ConnectedComponents(_FixpointApp):
                    validate: str = "strict",
                    mesh=None, shards: int | None = None
                    ) -> "ConnectedComponents":
+        with _trace.span("app.cc.build", backend=backend,
+                         num_nodes=num_nodes):
+            return cls._from_edges(
+                src, dst, num_nodes, lane_width=lane_width,
+                backend=backend, cost=cost, fused=fused, stage_b=stage_b,
+                interpret=interpret, plan_cache_dir=plan_cache_dir,
+                tune=tune, tune_cache_dir=tune_cache_dir, driver=driver,
+                validate=validate, mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_edges(cls, src, dst, num_nodes, *, lane_width, backend,
+                    cost, fused, stage_b, interpret, plan_cache_dir,
+                    tune, tune_cache_dir, driver, validate, mesh,
+                    shards) -> "ConnectedComponents":
         seed = cc_seed()
         src, dst, _, vreport = validation.validate_edges(
             src, dst, num_nodes, policy=validate)

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core import feature_table as ft
 from repro.core.plan import GATHER_FALLBACK, BlockPlan, PatternClass
+from repro.obs import trace as _trace
 
 # gather idioms a Launch can lower to
 FALLBACK = "fallback"     # native per-lane gather through gather_idx
@@ -87,6 +88,10 @@ class CodeTree:
     launches: list[Launch]
     stage_b: str = "auto"              # resolved by choose_stage_b
     passes: tuple[str, ...] = ()       # provenance, in application order
+    # per-pass tree-shape deltas, parallel to ``passes``: each entry is a
+    # dict with the pass name and its launch count before/after — the
+    # quantitative companion to the provenance tuple (DESIGN.md §11)
+    pass_deltas: tuple = ()
 
     @property
     def seed(self):
@@ -94,6 +99,16 @@ class CodeTree:
 
     def _with(self, **kw) -> "CodeTree":
         return dataclasses.replace(self, **kw)
+
+    def _after_pass(self, name: str, launches_before: int,
+                    **extra) -> "CodeTree":
+        """Stamp one pass into ``passes`` + ``pass_deltas`` (call on the
+        ALREADY-transformed tree)."""
+        delta = {"pass": name, "launches_before": launches_before,
+                 "launches_after": len(self.launches), **extra}
+        return dataclasses.replace(
+            self, passes=self.passes + (name,),
+            pass_deltas=self.pass_deltas + (delta,))
 
 
 def _launch_of_class(c: PatternClass) -> Launch:
@@ -108,9 +123,9 @@ def _launch_of_class(c: PatternClass) -> Launch:
 def build_tree(plan: BlockPlan, backend: str = "jax") -> CodeTree:
     """The un-lowered tree: one launch per pattern class, in exec order
     (the paper's per-class specialized form)."""
-    return CodeTree(plan=plan, backend=backend,
-                    launches=[_launch_of_class(c) for c in plan.classes],
-                    passes=("build",))
+    tree = CodeTree(plan=plan, backend=backend,
+                    launches=[_launch_of_class(c) for c in plan.classes])
+    return tree._after_pass("build", 0)
 
 
 # --------------------------------------------------------------- fusing
@@ -225,8 +240,8 @@ def fuse_sections(tree: CodeTree) -> CodeTree:
         launches = [_launch_of_class(c) for c in fused_xla_classes(plan)]
     else:
         launches = tree.launches
-    return tree._with(launches=launches,
-                      passes=tree.passes + ("fuse_sections",))
+    return tree._with(launches=launches)._after_pass(
+        "fuse_sections", len(tree.launches))
 
 
 # -------------------------------------------------------------- stage B
@@ -251,8 +266,8 @@ def choose_stage_b(tree: CodeTree, stage_b: str = "auto") -> CodeTree:
         raise ValueError(f"unknown stage_b {stage_b!r}")
     if tree.backend == "segsum":
         resolved = "fold"
-    return tree._with(stage_b=resolved,
-                      passes=tree.passes + ("choose_stage_b",))
+    return tree._with(stage_b=resolved)._after_pass(
+        "choose_stage_b", len(tree.launches), stage_b=resolved)
 
 
 # ---------------------------------------------------- gather coalescing
@@ -290,7 +305,8 @@ def coalesce_gathers(tree: CodeTree,
     window DMA path (the pass is an XLA-lowering concern).
     """
     if tree.backend not in ("jax",) or tree.seed.gather_index is None:
-        return tree._with(passes=tree.passes + ("coalesce_gathers:skip",))
+        return tree._after_pass("coalesce_gathers:skip",
+                                len(tree.launches))
     plan = tree.plan
     out: list[Launch] = []
     for launch in tree.launches:
@@ -304,8 +320,9 @@ def coalesce_gathers(tree: CodeTree,
             out.append(launch)
             continue
         out.extend(_split_launch(launch, runs, gidx, min_run_blocks))
-    return tree._with(launches=out,
-                      passes=tree.passes + ("coalesce_gathers",))
+    return tree._with(launches=out)._after_pass(
+        "coalesce_gathers", len(tree.launches),
+        coalesced_launches=sum(1 for la in out if la.gather == COALESCED))
 
 
 def _split_launch(launch: Launch, runs: ft.GatherRunFeatures,
@@ -349,13 +366,29 @@ def lower(plan: BlockPlan, backend: str = "jax", fused: bool = True,
     the passes in their one legal order (fuse before coalesce — the
     run detector sees the launch ranges that will actually execute;
     stage-B choice is independent but resolved before emission so every
-    emitter sees a concrete write-back node)."""
-    tree = build_tree(plan, backend)
-    if fused:
-        tree = fuse_sections(tree)
-    tree = choose_stage_b(tree, stage_b)
-    if coalesce:
-        tree = coalesce_gathers(tree)
+    emitter sees a concrete write-back node).
+
+    When tracing is enabled every pass gets its own ``ir.pass.*`` span
+    whose attributes carry the launch-count delta — the same numbers
+    stamped into ``tree.pass_deltas`` alongside the ``tree.passes``
+    provenance."""
+    with _trace.span("ir.lower", backend=backend, fused=fused,
+                     coalesce=coalesce) as sp:
+        with _trace.span("ir.pass.build") as s:
+            tree = build_tree(plan, backend)
+            s.set(**tree.pass_deltas[-1])
+        if fused:
+            with _trace.span("ir.pass.fuse_sections") as s:
+                tree = fuse_sections(tree)
+                s.set(**tree.pass_deltas[-1])
+        with _trace.span("ir.pass.choose_stage_b") as s:
+            tree = choose_stage_b(tree, stage_b)
+            s.set(**tree.pass_deltas[-1])
+        if coalesce:
+            with _trace.span("ir.pass.coalesce_gathers") as s:
+                tree = coalesce_gathers(tree)
+                s.set(**tree.pass_deltas[-1])
+        sp.set(launches=len(tree.launches), passes=",".join(tree.passes))
     return tree
 
 
@@ -525,6 +558,16 @@ def partition_plan(tree: CodeTree, shards: int) -> list[PlanShard]:
             "'segsum' for sharded execution")
     plan = tree.plan
     b, n = plan.num_blocks, plan.lane_width
+    with _trace.span("ir.partition_plan", shards=shards,
+                     num_blocks=b) as sp:
+        out = _partition_plan_impl(tree, plan, b, n, shards)
+        sp.set(shard_blocks=",".join(str(p.num_blocks) for p in out),
+               shard_rows=",".join(str(p.num_rows) for p in out))
+    return out
+
+
+def _partition_plan_impl(tree: CodeTree, plan: BlockPlan, b: int, n: int,
+                         shards: int) -> list[PlanShard]:
     cuts = _pick_cuts(plan, shards)
     row_min, row_max = _block_row_spans(plan)
     # owner shard per block: the range containing its row span (legal
@@ -563,11 +606,17 @@ def partition_plan(tree: CodeTree, shards: int) -> list[PlanShard]:
             flat_perm=np.ascontiguousarray(
                 plan.flat_perm.reshape(b, n)[ids]).reshape(-1),
             head_pos=head_pos, head_rows=head_rows, stats=stats)
+        shard_launches = _shard_launches(tree.launches, ids, pos_in_shard)
         shard_tree = CodeTree(
             plan=shard_plan, backend=tree.backend,
-            launches=_shard_launches(tree.launches, ids, pos_in_shard),
+            launches=shard_launches,
             stage_b=tree.stage_b,
-            passes=tree.passes + (f"partition_plan[{s}/{shards}]",))
+            passes=tree.passes + (f"partition_plan[{s}/{shards}]",),
+            pass_deltas=tree.pass_deltas + (
+                {"pass": f"partition_plan[{s}/{shards}]",
+                 "launches_before": len(tree.launches),
+                 "launches_after": len(shard_launches),
+                 "rows": hi - lo, "blocks": int(ids.size)},))
         out.append(PlanShard(index=s, num_shards=shards, row_start=lo,
                              row_stop=hi, block_ids=ids, tree=shard_tree))
     assigned = np.concatenate([p.block_ids for p in out]) if out else \

@@ -31,11 +31,14 @@ Cost model (paper §5.3/§6.4 re-derived for TPU):
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core import feature_table as ft
 from repro.core.seed import CodeSeed
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 GATHER_FALLBACK = 0  # ls_flag sentinel: keep the native gather for this class
 
@@ -132,8 +135,26 @@ def build_plan(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     ``access`` maps access-array names -> int numpy arrays of length nnz.
     Only *immutable* inputs are consulted, matching the paper's legality
     argument.
+
+    Instrumented (DESIGN.md §11): a ``plan.build`` span with feature /
+    binning / reorder child spans when tracing is enabled, plus the
+    ``plan.builds`` counter and ``plan.build_seconds`` histogram
+    unconditionally (a handful of registry ops per build — invisible
+    next to the nnz-sized vector passes).
     """
     cost = cost or CostModel()
+    t0 = time.perf_counter()
+    with _trace.span("plan.build", lane_width=cost.lane_width) as sp:
+        plan = _build_plan_impl(seed, access, out_len, data_len, cost)
+        sp.set(nnz=plan.nnz, num_blocks=plan.num_blocks,
+               num_classes=plan.stats.num_classes)
+    _metrics.inc("plan.builds")
+    _metrics.observe("plan.build_seconds", time.perf_counter() - t0)
+    return plan
+
+
+def _build_plan_impl(seed: CodeSeed, access: dict, out_len: int,
+                     data_len: int, cost: CostModel) -> BlockPlan:
     n = cost.lane_width
     out_idx = np.asarray(access[seed.out_index], dtype=np.int64)
     nnz = int(out_idx.shape[0])
@@ -150,17 +171,21 @@ def build_plan(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     pos_blocks = ft.pad_to_blocks(np.arange(nnz, dtype=np.int64), n, fill=nnz)
 
     # ---- §5 reduction features + physical in-block sort (Data Transfer)
-    rf = ft.reduce_features(out_blocks, n, pad_value=-1)
-    pos_sorted = np.take_along_axis(pos_blocks, rf.sort_perm, axis=1)
-    gidx_blocks = ft.pad_to_blocks(gidx, n, fill=int(gidx[-1]) if nnz else 0)
-    gidx_sorted = np.take_along_axis(gidx_blocks, rf.sort_perm, axis=1)
+    with _trace.span("plan.features.reduce"):
+        rf = ft.reduce_features(out_blocks, n, pad_value=-1)
+        pos_sorted = np.take_along_axis(pos_blocks, rf.sort_perm, axis=1)
+        gidx_blocks = ft.pad_to_blocks(gidx, n,
+                                       fill=int(gidx[-1]) if nnz else 0)
+        gidx_sorted = np.take_along_axis(gidx_blocks, rf.sort_perm, axis=1)
 
     # ---- §6 gather features on the post-sort index stream
-    gf = ft.gather_features(gidx_sorted, n)
+    with _trace.span("plan.features.gather"):
+        gf = ft.gather_features(gidx_sorted, n)
 
     # ---- Fig. 3c column hashing (dedup accounting)
-    hashes = ft.pattern_hashes(gf, rf)
-    dedup = ft.dedup_ratio(hashes)
+    with _trace.span("plan.features.hash"):
+        hashes = ft.pattern_hashes(gf, rf)
+        dedup = ft.dedup_ratio(hashes)
 
     # ---- class binning + cost model (vectorized: encode the class key into
     # one order-preserving int64 and np.unique it — no per-block zip/dict
@@ -169,45 +194,49 @@ def build_plan(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     # contiguous block range, and op is the next key so the fused ladder
     # runs per contiguous op-group — every block gets exactly the
     # shift-reduce depth its class needs (DESIGN.md §3).
-    ls_class, stream = _class_key_of_blocks(gf, rf, cost)
-    op_class = rf.op_flag
-    # op_class >= FULL_REDUCE (-1) so op+1 >= 0 and < 2^16; ls < 2^20.
-    key_code = (((ls_class != GATHER_FALLBACK).astype(np.int64) << 40)
-                | ((op_class.astype(np.int64) + 1) << 24)
-                | (ls_class.astype(np.int64) << 4)
-                | stream.astype(np.int64))
-    uniq_codes, cid = np.unique(key_code, return_inverse=True)
-    cid = cid.astype(np.int32)
-    exec_order = np.argsort(cid, kind="stable")        # original block -> sorted
-    counts = np.bincount(cid, minlength=uniq_codes.shape[0])
-    stops = np.cumsum(counts)
-    starts = stops - counts
+    with _trace.span("plan.binning") as sp_bin:
+        ls_class, stream = _class_key_of_blocks(gf, rf, cost)
+        op_class = rf.op_flag
+        # op_class >= FULL_REDUCE (-1) so op+1 >= 0 and < 2^16; ls < 2^20.
+        key_code = (((ls_class != GATHER_FALLBACK).astype(np.int64) << 40)
+                    | ((op_class.astype(np.int64) + 1) << 24)
+                    | (ls_class.astype(np.int64) << 4)
+                    | stream.astype(np.int64))
+        uniq_codes, cid = np.unique(key_code, return_inverse=True)
+        cid = cid.astype(np.int32)
+        exec_order = np.argsort(cid, kind="stable")    # original block -> sorted
+        counts = np.bincount(cid, minlength=uniq_codes.shape[0])
+        stops = np.cumsum(counts)
+        starts = stops - counts
 
-    classes = []
-    for i, code in enumerate(uniq_codes.tolist()):
-        classes.append(PatternClass(ls_flag=int((code >> 4) & 0xFFFFF),
-                                    op_flag=int(((code >> 24) & 0xFFFF) - 1),
-                                    stream=bool(code & 1),
-                                    start=int(starts[i]),
-                                    stop=int(stops[i])))
+        classes = []
+        for i, code in enumerate(uniq_codes.tolist()):
+            classes.append(PatternClass(ls_flag=int((code >> 4) & 0xFFFFF),
+                                        op_flag=int(((code >> 24) & 0xFFFF)
+                                                    - 1),
+                                        stream=bool(code & 1),
+                                        start=int(starts[i]),
+                                        stop=int(stops[i])))
+        sp_bin.set(num_classes=len(classes), num_blocks=b)
 
     # ---- reorder all per-block metadata into exec order
-    def r(a):
-        return np.ascontiguousarray(a[exec_order])
+    with _trace.span("plan.reorder"):
+        def r(a):
+            return np.ascontiguousarray(a[exec_order])
 
-    window_ids = r(gf.window_ids)
-    lane_slot = r(gf.lane_slot).astype(np.uint8)
-    off_dtype = np.uint8 if n <= 256 else np.uint16
-    lane_offset = r(gf.lane_offset).astype(off_dtype)
-    seg_ids = r(rf.seg_ids).astype(np.int32)
-    gather_idx_exec = r(gidx_sorted).astype(np.int32)
-    head_mask = r(rf.head_mask)
-    write_sorted = r(rf.write_sorted)
-    valid = write_sorted != -1
-    flat_perm = r(pos_sorted).reshape(-1)
+        window_ids = r(gf.window_ids)
+        lane_slot = r(gf.lane_slot).astype(np.uint8)
+        off_dtype = np.uint8 if n <= 256 else np.uint16
+        lane_offset = r(gf.lane_offset).astype(off_dtype)
+        seg_ids = r(rf.seg_ids).astype(np.int32)
+        gather_idx_exec = r(gidx_sorted).astype(np.int32)
+        head_mask = r(rf.head_mask)
+        write_sorted = r(rf.write_sorted)
+        valid = write_sorted != -1
+        flat_perm = r(pos_sorted).reshape(-1)
 
-    head_pos = np.nonzero(head_mask.reshape(-1))[0].astype(np.int64)
-    head_rows = write_sorted.reshape(-1)[head_pos]
+        head_pos = np.nonzero(head_mask.reshape(-1))[0].astype(np.int64)
+        head_rows = write_sorted.reshape(-1)[head_pos]
 
     # ---- stats (paper Tables 1–3 / Table 6 accounting), vectorized
     frac = 1.0 / max(b, 1)

@@ -26,6 +26,11 @@ import numpy as np
 from repro.core.plan import BlockPlan, CostModel, PatternClass, PlanStats, \
     build_plan
 from repro.core import seed as seed_mod
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.obs.log import get_logger
+
+_log = get_logger("repro.plan_cache")
 
 try:                                    # optional: smaller files when present
     import zstandard as _zstd
@@ -253,44 +258,61 @@ def cached_build_plan(seed, access: dict, out_len: int, data_len: int,
     from repro.core import validate as vmod
     digest = plan_digest(seed.name, access, out_len, data_len, cost)
     path = os.path.join(cache_dir, f"{seed.name}-{digest}.plan")
-    if os.path.exists(path):
-        try:
-            return load_plan(path)
-        except Exception as e:
-            # corrupt / truncated / torn / other-version entry: warn,
-            # drop the bad file, and rebuild — a cache may only skip
-            # work, never crash the build or change its result.
-            vmod.record_degradation(
-                "plan_cache", "corrupt_entry", f"{path}: {e!r}",
-                "rebuild from scratch + republish")
-            warnings.warn(f"plan cache entry {path} unreadable ({e!r}); "
-                          "rebuilding plan from scratch", RuntimeWarning)
+    with _trace.span("plan_cache.lookup", digest=digest) as sp:
+        if os.path.exists(path):
             try:
-                os.unlink(path)
-            except OSError:             # pragma: no cover - racing unlink
-                pass
+                plan = load_plan(path)
+                _metrics.inc("plan_cache.hits")
+                sp.set(outcome="hit")
+                return plan
+            except Exception as e:
+                # corrupt / truncated / torn / other-version entry: warn,
+                # drop the bad file, and rebuild — a cache may only skip
+                # work, never crash the build or change its result.
+                _metrics.inc("plan_cache.corrupt")
+                sp.set(outcome="corrupt")
+                vmod.record_degradation(
+                    "plan_cache", "corrupt_entry", f"{path}: {e!r}",
+                    "rebuild from scratch + republish")
+                _log.warning("plan cache entry %s unreadable (%r); "
+                             "rebuilding plan from scratch", path, e)
+                warnings.warn(f"plan cache entry {path} unreadable "
+                              f"({e!r}); rebuilding plan from scratch",
+                              RuntimeWarning)
+                try:
+                    os.unlink(path)
+                except OSError:         # pragma: no cover - racing unlink
+                    pass
+        else:
+            _metrics.inc("plan_cache.misses")
+            sp.set(outcome="miss")
     plan = build_plan(seed, access, out_len, data_len, cost=cost)
     # unwritable dir (EROFS, EACCES, ENOSPC, quota): the plan is already
     # built — degrade to in-memory use with ONE warning per dir + a
     # recorded DegradationEvent instead of raising out of the build
     tmp = None
-    try:
-        os.makedirs(cache_dir, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
-        os.close(fd)
-        save_plan(tmp, plan)
-        os.replace(tmp, path)           # atomic publish
-    except OSError as e:
-        vmod.record_degradation(
-            "plan_cache", "write_failed", f"{cache_dir}: {e!r}",
-            "in-memory plan (no persistence)")
-        vmod.warn_once(("plan_cache_write", cache_dir),
-                       f"plan cache dir {cache_dir} is unwritable "
-                       f"({e!r}); plans will be rebuilt each process")
-    finally:
+    with _trace.span("plan_cache.publish", digest=digest) as sp:
         try:
-            if tmp is not None and os.path.exists(tmp):
-                os.unlink(tmp)
-        except OSError:                 # pragma: no cover - EROFS cleanup
-            pass
+            os.makedirs(cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+            os.close(fd)
+            save_plan(tmp, plan)
+            os.replace(tmp, path)       # atomic publish
+            _metrics.inc("plan_cache.stores")
+        except OSError as e:
+            _metrics.inc("plan_cache.write_failed")
+            sp.set(outcome="write_failed")
+            vmod.record_degradation(
+                "plan_cache", "write_failed", f"{cache_dir}: {e!r}",
+                "in-memory plan (no persistence)")
+            vmod.warn_once(("plan_cache_write", cache_dir),
+                           f"plan cache dir {cache_dir} is unwritable "
+                           f"({e!r}); plans will be rebuilt each process",
+                           logger="repro.plan_cache")
+        finally:
+            try:
+                if tmp is not None and os.path.exists(tmp):
+                    os.unlink(tmp)
+            except OSError:             # pragma: no cover - EROFS cleanup
+                pass
     return plan

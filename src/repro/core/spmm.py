@@ -30,6 +30,7 @@ from repro.core import engine as eng
 from repro.core import validate as validation
 from repro.core.plan import BlockPlan, CostModel
 from repro.core.seed import spmv_seed
+from repro.obs import trace as _trace
 
 _BACKENDS = ("jax", "segsum", "auto")
 
@@ -61,6 +62,20 @@ class SpMM:
                  tune_cache_dir: str | None = None,
                  validate: str = "strict",
                  mesh=None, shards: int | None = None) -> "SpMM":
+        with _trace.span("app.spmm.build", backend=backend,
+                         nnz=int(np.asarray(vals).size)):
+            return cls._from_coo(
+                rows, cols, vals, shape, lane_width=lane_width,
+                backend=backend, cost=cost, fused=fused, stage_b=stage_b,
+                coalesce=coalesce, reduce=reduce,
+                plan_cache_dir=plan_cache_dir, tune=tune,
+                tune_cache_dir=tune_cache_dir, validate=validate,
+                mesh=mesh, shards=shards)
+
+    @classmethod
+    def _from_coo(cls, rows, cols, vals, shape, *, lane_width, backend,
+                  cost, fused, stage_b, coalesce, reduce, plan_cache_dir,
+                  tune, tune_cache_dir, validate, mesh, shards) -> "SpMM":
         from repro.core import planio
         if backend not in _BACKENDS:
             raise ValueError(
@@ -140,3 +155,15 @@ class SpMM:
                               reduce_identity_for(self.reduce, bmat.dtype),
                               bmat.dtype)
         return self._run({"x": bmat}, y_init)
+
+    def report(self):
+        """Structured :class:`~repro.obs.profile.RunReport`: plan stats,
+        IR pass deltas, per-launch cost attribution, tuning choice,
+        validation summary, and recorded degradations."""
+        from repro.core.seed import reduce_identity_for
+        from repro.obs.profile import build_report
+        example = ({"x": jnp.zeros((self.shape[1], 8), jnp.float32)},
+                   jnp.full((self.shape[0], 8),
+                            reduce_identity_for(self.reduce, np.float32),
+                            jnp.float32))
+        return build_report(self, "SpMM", example=example)

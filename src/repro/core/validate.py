@@ -39,6 +39,13 @@ import warnings
 
 import numpy as np
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.obs.log import get_logger
+
+_log = get_logger("repro.validate")
+_deg_log = get_logger("repro.degradation")
+
 POLICIES = ("strict", "repair", "off")
 
 # how many offending positions an InputError carries (the full set can be
@@ -93,12 +100,15 @@ class DegradationEvent:
     (``plan_cache`` / ``tune_cache`` / ``tune``), ``kind`` the failure
     class (``write_failed`` / ``corrupt_entry`` / ``candidate_failed`` /
     ``measurement_failed`` / ``replay_failed``), ``fallback`` what ran
-    instead."""
+    instead.  ``span_id`` is the innermost open trace span at record
+    time (None when tracing is off) — it joins the degradation trail to
+    the span tree in exported traces (DESIGN.md §11)."""
 
     layer: str
     kind: str
     detail: str
     fallback: str
+    span_id: int | None = None
 
 
 # sink stack is thread-local: a build on one thread must not leak its
@@ -140,11 +150,19 @@ def record_degradation(layer: str, kind: str, detail: str,
                        fallback: str) -> DegradationEvent:
     """Append a :class:`DegradationEvent` to every active collector (a
     no-op trail when nobody is collecting — recording must never be the
-    thing that fails)."""
+    thing that fails).  Every event also increments the process-wide
+    ``degradation.events`` / ``degradation.<layer>.<kind>`` counters and
+    logs to ``repro.degradation``, so the trail is visible even when no
+    collector (and no warnings filter) is active."""
     ev = DegradationEvent(layer=layer, kind=kind, detail=detail,
-                          fallback=fallback)
+                          fallback=fallback,
+                          span_id=_trace.current_span_id())
     for sink in _sinks():
         sink.append(ev)
+    _metrics.inc("degradation.events")
+    _metrics.inc(f"degradation.{layer}.{kind}")
+    _deg_log.warning("%s/%s: %s (fallback: %s)", layer, kind, detail,
+                     fallback)
     return ev
 
 
@@ -152,14 +170,22 @@ _warned_keys: set = set()
 _warned_lock = threading.Lock()
 
 
-def warn_once(key, message: str, category=RuntimeWarning) -> bool:
+def warn_once(key, message: str, category=RuntimeWarning,
+              logger: str = "repro.validate") -> bool:
     """Warn the first time ``key`` is seen in this process.  A cache dir
     that is unwritable stays unwritable: one warning tells the operator,
-    a warning per build is log spam.  Returns True if it warned."""
+    a warning per build is log spam.  Returns True if it warned.
+
+    Every first-seen message is ALSO emitted through the ``repro.*``
+    logger hierarchy (``logger`` names the child — cache layers pass
+    ``"repro.plan_cache"`` / ``"repro.tune_cache"``), so embedders can
+    capture/filter structurally instead of scraping RuntimeWarnings;
+    the legacy ``warnings.warn`` stays for interactive use and tests."""
     with _warned_lock:
         if key in _warned_keys:
             return False
         _warned_keys.add(key)
+    get_logger(logger).warning(message)
     warnings.warn(message, category, stacklevel=3)
     return True
 
@@ -260,6 +286,7 @@ def _combine_duplicates(rows: np.ndarray, cols: np.ndarray,
     return rows, cols, vals, dups
 
 
+@_trace.traced("validate.coo")
 def validate_coo(rows, cols, vals, shape, *, policy: str = "strict",
                  reduce: str = "add"):
     """Validate (and under ``repair``, canonicalize) a COO triple.
@@ -335,6 +362,7 @@ def validate_coo(rows, cols, vals, shape, *, policy: str = "strict",
         duplicates_combined=dups, canonicalized=True)
 
 
+@_trace.traced("validate.csr")
 def validate_csr(indptr, indices, vals, shape, *, policy: str = "strict",
                  reduce: str = "add"):
     """Validate a CSR triple; returns ``(indptr, indices, vals, report)``.
@@ -398,6 +426,7 @@ def validate_csr(indptr, indices, vals, shape, *, policy: str = "strict",
     return indptr, indices, vals, report
 
 
+@_trace.traced("validate.edges")
 def validate_edges(src, dst, num_nodes: int, weight=None, *,
                    policy: str = "strict"):
     """Validate a graph edge list; returns ``(src, dst, weight, report)``

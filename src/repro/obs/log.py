@@ -1,0 +1,78 @@
+"""The ``repro.*`` logger hierarchy.
+
+Production embedders capture pipeline warnings (cache corruption,
+degradation fallbacks, validation repairs) by attaching a handler to the
+``"repro"`` logger or any child (``repro.plan_cache``, ``repro.tune``,
+``repro.validate``, ``repro.degradation``) — no more scraping
+``RuntimeWarning`` out of the warnings filter.  The legacy
+``warnings.warn`` calls are kept alongside (tests and notebooks rely on
+them); the logger is the structured, filterable channel.
+
+``REPRO_LOG`` configures console output without touching code:
+
+* ``REPRO_LOG=info`` — stderr handler on ``repro`` at INFO
+* ``REPRO_LOG=repro.tune=debug,repro=warning`` — per-logger levels
+  (a stderr handler is installed on ``repro``)
+
+Unset (the default), the hierarchy stays silent: a ``NullHandler`` on
+the ``repro`` root stops the stdlib's last-resort stderr handler from
+double-printing every warning-level record.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import threading
+
+__all__ = ["get_logger"]
+
+_configured = False
+_config_lock = threading.Lock()
+
+
+def _parse_spec(spec: str) -> list[tuple[str, int]]:
+    """``"info"`` -> [("repro", INFO)]; ``"repro.tune=debug,..."`` ->
+    one (logger, level) per comma-separated entry.  Unknown level names
+    are ignored (a bad env var must never crash a build)."""
+    out: list[tuple[str, int]] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, level_name = part.rpartition("=")
+        name = name or "repro"
+        level = logging.getLevelName(level_name.strip().upper())
+        if isinstance(level, int):
+            out.append((name if name.startswith("repro") else
+                        f"repro.{name}", level))
+    return out
+
+
+def _configure_once() -> None:
+    global _configured
+    if _configured:
+        return
+    with _config_lock:
+        if _configured:
+            return
+        root = logging.getLogger("repro")
+        root.addHandler(logging.NullHandler())
+        spec = os.environ.get("REPRO_LOG", "")
+        levels = _parse_spec(spec) if spec else []
+        if levels:
+            handler = logging.StreamHandler()
+            handler.setFormatter(logging.Formatter(
+                "%(asctime)s %(name)s %(levelname)s %(message)s"))
+            root.addHandler(handler)
+            for name, level in levels:
+                logging.getLogger(name).setLevel(level)
+        _configured = True
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    """A logger under the ``repro`` hierarchy (prefix added when
+    missing), with the one-time ``REPRO_LOG`` configuration applied."""
+    _configure_once()
+    if not (name == "repro" or name.startswith("repro.")):
+        name = f"repro.{name}"
+    return logging.getLogger(name)

@@ -32,6 +32,12 @@ import os
 import tempfile
 import warnings
 
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+from repro.obs.log import get_logger
+
+_log = get_logger("repro.tune_cache")
+
 SCHEMA = "tune.v2"
 
 
@@ -59,24 +65,34 @@ def load_entry(cache_dir: str, key: str) -> dict | None:
     schema).  Never raises: a cache problem costs a re-tune, not a run."""
     from repro.core import validate as vmod
     path = entry_path(cache_dir, key)
-    if not os.path.exists(path):
-        return None
-    try:
-        with open(path, "r") as f:
-            entry = json.load(f)
-        if entry.get("schema") != SCHEMA or "choice" not in entry:
-            raise ValueError(f"schema {entry.get('schema')!r} != {SCHEMA}")
-        return entry
-    except Exception as e:
-        vmod.record_degradation("tune_cache", "corrupt_entry",
-                                f"{path}: {e!r}", "re-tune + republish")
-        warnings.warn(f"tuning cache entry {path} unreadable ({e!r}); "
-                      "re-tuning", RuntimeWarning)
+    with _trace.span("tune_cache.lookup", key=key) as sp:
+        if not os.path.exists(path):
+            _metrics.inc("tune_cache.misses")
+            sp.set(outcome="miss")
+            return None
         try:
-            os.unlink(path)
-        except OSError:
-            pass
-        return None
+            with open(path, "r") as f:
+                entry = json.load(f)
+            if entry.get("schema") != SCHEMA or "choice" not in entry:
+                raise ValueError(
+                    f"schema {entry.get('schema')!r} != {SCHEMA}")
+            _metrics.inc("tune_cache.hits")
+            sp.set(outcome="hit")
+            return entry
+        except Exception as e:
+            _metrics.inc("tune_cache.corrupt")
+            sp.set(outcome="corrupt")
+            vmod.record_degradation("tune_cache", "corrupt_entry",
+                                    f"{path}: {e!r}", "re-tune + republish")
+            _log.warning("tuning cache entry %s unreadable (%r); "
+                         "re-tuning", path, e)
+            warnings.warn(f"tuning cache entry {path} unreadable ({e!r}); "
+                          "re-tuning", RuntimeWarning)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
 
 
 def store_entry(cache_dir: str, key: str, payload: dict) -> None:
@@ -92,19 +108,23 @@ def store_entry(cache_dir: str, key: str, payload: dict) -> None:
     payload = {"schema": SCHEMA, "key": key, **payload}
     tmp = None
     try:
-        os.makedirs(cache_dir, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-            f.write("\n")
-        os.replace(tmp, entry_path(cache_dir, key))
+        with _trace.span("tune_cache.publish", key=key):
+            os.makedirs(cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, entry_path(cache_dir, key))
+        _metrics.inc("tune_cache.stores")
     except OSError as e:
+        _metrics.inc("tune_cache.write_failed")
         vmod.record_degradation(
             "tune_cache", "write_failed", f"{cache_dir}: {e!r}",
             "tuning decision not persisted (re-tune next process)")
         vmod.warn_once(("tune_cache_write", cache_dir),
                        f"tuning cache dir {cache_dir} is unwritable "
-                       f"({e!r}); decisions will not persist")
+                       f"({e!r}); decisions will not persist",
+                       logger="repro.tune_cache")
     finally:
         try:
             if tmp is not None and os.path.exists(tmp):

@@ -31,18 +31,20 @@ import numpy as np
 
 from repro.core import engine as eng
 from repro.core.seed import CodeSeed, reference_execute
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.tune import cache as tcache
 from repro.tune import cost as tcost
 from repro.tune import space as tspace
 from repro.tune.space import Candidate
 
-_measurements = 0
-
 
 def measurement_count() -> int:
     """Total timed candidate measurements made by this module — a warm
-    tuning-cache hit must leave this counter unchanged."""
-    return _measurements
+    tuning-cache hit must leave this counter unchanged.  Backed by the
+    process-wide ``tune.measurements`` counter in :mod:`repro.obs.metrics`
+    (this function is the stable re-export)."""
+    return int(_metrics.value("tune.measurements"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,9 +178,10 @@ def _measure_all(runs: list, mutable, out_init, warmup: int, iters: int,
                  rounds: int = 12) -> list[float]:
     """:func:`measure_paired` plus the measurement accounting the warm
     tuning-cache guarantee is asserted against."""
-    global _measurements
-    out = measure_paired(runs, mutable, out_init, warmup, iters, rounds)
-    _measurements += len(runs)
+    with _trace.span("tune.measure", candidates=len(runs), rounds=rounds):
+        out = measure_paired(runs, mutable, out_init, warmup, iters,
+                             rounds)
+    _metrics.inc("tune.measurements", len(runs))
     return out
 
 
@@ -271,6 +274,28 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     tuning-cache key so a per-sweep choice is never replayed as a
     per-run choice (or vice versa).
     """
+    with _trace.span("tune.autotune", seed=seed.name) as sp:
+        plan, run, result = _autotune_impl(
+            seed, access, out_len, data_len, static_data, mutable_example,
+            out_init, space=space, platform=platform,
+            lane_widths=lane_widths, shard_counts=shard_counts,
+            top_k=top_k, warmup=warmup, iters=iters,
+            tune_cache_dir=tune_cache_dir, plan_cache_dir=plan_cache_dir,
+            allow_interpret=allow_interpret, force=force,
+            exec_factory=exec_factory, oracle=oracle,
+            measure_wrap=measure_wrap, cache_extra=cache_extra)
+        sp.set(picked_by=result.picked_by, cache_hit=result.cache_hit,
+               measured=result.num_measured,
+               plans_built=result.plans_built, best=result.best.label)
+        return plan, run, result
+
+
+def _autotune_impl(seed: CodeSeed, access: dict, out_len: int,
+                   data_len: int, static_data: dict, mutable_example: dict,
+                   out_init, *, space, platform, lane_widths, shard_counts,
+                   top_k, warmup, iters, tune_cache_dir, plan_cache_dir,
+                   allow_interpret, force, exec_factory, oracle,
+                   measure_wrap, cache_extra):
     platform = platform or tspace.default_platform()
     if space is None:
         space = tspace.candidate_space(
@@ -293,11 +318,13 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
             entry = tcache.load_entry(tune_cache_dir, key)
             if entry is not None:
                 try:
-                    best = Candidate.from_dict(entry["choice"])
-                    plan = _build_plan(seed, access, out_len, data_len,
-                                       best, plan_cache_dir)
-                    elem_exec = eng.reorder_static(plan, static_data)
-                    run = exec_factory(plan, best, static_data, elem_exec)
+                    with _trace.span("tune.cache_replay", key=key):
+                        best = Candidate.from_dict(entry["choice"])
+                        plan = _build_plan(seed, access, out_len, data_len,
+                                           best, plan_cache_dir)
+                        elem_exec = eng.reorder_static(plan, static_data)
+                        run = exec_factory(plan, best, static_data,
+                                           elem_exec)
                     return plan, run, TuningResult(
                         best=best, best_us=None, measurements=[],
                         cache_hit=True, key=key, platform=platform,
@@ -315,39 +342,47 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     # ---- one plan (and one Data Transfer) per distinct plan key; a plan
     # key whose build raises disqualifies its candidates, not the tune
     plans, elems, features, plan_errors = {}, {}, {}, {}
-    for c in space:
-        if c.plan_key in plans or c.plan_key in plan_errors:
-            continue
-        try:
-            plan = _build_plan(seed, access, out_len, data_len, c,
-                               plan_cache_dir)
-            plans[c.plan_key] = plan
-            elems[c.plan_key] = eng.reorder_static(plan, static_data)
-            features[c.plan_key] = tcost.plan_features(plan)
-        except Exception as e:
-            plan_errors[c.plan_key] = e
-            vmod.record_degradation(
-                "tune", "candidate_failed",
-                f"plan build for {c.plan_key}: {e!r}",
-                "candidates on this plan disqualified")
-            warnings.warn(f"tuning plan build for {c.plan_key} raised "
-                          f"({e!r}); its candidates are disqualified",
-                          RuntimeWarning)
+    with _trace.span("tune.plan_builds",
+                     candidates=len(space)) as sp_plans:
+        for c in space:
+            if c.plan_key in plans or c.plan_key in plan_errors:
+                continue
+            try:
+                plan = _build_plan(seed, access, out_len, data_len, c,
+                                   plan_cache_dir)
+                plans[c.plan_key] = plan
+                elems[c.plan_key] = eng.reorder_static(plan, static_data)
+                features[c.plan_key] = tcost.plan_features(plan)
+            except Exception as e:
+                plan_errors[c.plan_key] = e
+                vmod.record_degradation(
+                    "tune", "candidate_failed",
+                    f"plan build for {c.plan_key}: {e!r}",
+                    "candidates on this plan disqualified")
+                warnings.warn(f"tuning plan build for {c.plan_key} raised "
+                              f"({e!r}); its candidates are disqualified",
+                              RuntimeWarning)
+        sp_plans.set(plans_built=len(plans), failed=len(plan_errors))
     if not plans:
         raise RuntimeError(
             "autotune: every plan build failed "
             f"({ {k: repr(v) for k, v in plan_errors.items()} })")
     space = [c for c in space if c.plan_key in plans]
 
-    ranked = tcost.rank_candidates(space, features, platform, top_k=top_k)
-    # every shard count in the space must reach the measurement phase:
-    # the caller opened that axis explicitly, and the cost model's
-    # collective constant is far too coarse to close it analytically
-    missing = {c.shards for c in space} - {c.shards for c, _ in ranked}
-    if missing:
-        full = tcost.rank_candidates(space, features, platform, top_k=None)
-        ranked += [next(t for t in full if t[0].shards == k)
-                   for k in sorted(missing)]
+    with _trace.span("tune.rank", candidates=len(space),
+                     top_k=top_k) as sp_rank:
+        ranked = tcost.rank_candidates(space, features, platform,
+                                       top_k=top_k)
+        # every shard count in the space must reach the measurement phase:
+        # the caller opened that axis explicitly, and the cost model's
+        # collective constant is far too coarse to close it analytically
+        missing = {c.shards for c in space} - {c.shards for c, _ in ranked}
+        if missing:
+            full = tcost.rank_candidates(space, features, platform,
+                                         top_k=None)
+            ranked += [next(t for t in full if t[0].shards == k)
+                       for k in sorted(missing)]
+        sp_rank.set(ranked=len(ranked))
 
     if oracle == "reference":
         data = dict(static_data)
@@ -359,32 +394,36 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
     # A candidate that RAISES anywhere — executor build, warmup, or a
     # timed call — is disqualified with a DegradationEvent, never fatal.
     built, runs, dead = [], {}, []
-    for cand, predicted in ranked:
-        plan = plans[cand.plan_key]
-        try:
-            run = exec_factory(plan, cand, static_data,
-                               elems[cand.plan_key])
-            ok = True
-            if oracle is not None:
-                ok = _outputs_match(run(mutable_example, out_init), oracle)
-                if not ok:
-                    warnings.warn(
-                        f"tuning candidate {cand.label} diverges from the "
-                        "oracle output; rejected", RuntimeWarning)
-        except Exception as e:
-            vmod.record_degradation(
-                "tune", "candidate_failed", f"{cand.label}: {e!r}",
-                "candidate disqualified")
-            warnings.warn(
-                f"tuning candidate {cand.label} raised during "
-                f"build/warmup ({e!r}); disqualified", RuntimeWarning)
-            dead.append(Measurement(candidate=cand,
-                                    us_per_call=float("inf"),
-                                    predicted_us=predicted, ok=False,
-                                    error=repr(e)))
-            continue
-        built.append((cand, predicted, ok, run))
-        runs[cand] = run
+    with _trace.span("tune.build_candidates",
+                     ranked=len(ranked)) as sp_build:
+        for cand, predicted in ranked:
+            plan = plans[cand.plan_key]
+            try:
+                run = exec_factory(plan, cand, static_data,
+                                   elems[cand.plan_key])
+                ok = True
+                if oracle is not None:
+                    ok = _outputs_match(run(mutable_example, out_init),
+                                        oracle)
+                    if not ok:
+                        warnings.warn(
+                            f"tuning candidate {cand.label} diverges from "
+                            "the oracle output; rejected", RuntimeWarning)
+            except Exception as e:
+                vmod.record_degradation(
+                    "tune", "candidate_failed", f"{cand.label}: {e!r}",
+                    "candidate disqualified")
+                warnings.warn(
+                    f"tuning candidate {cand.label} raised during "
+                    f"build/warmup ({e!r}); disqualified", RuntimeWarning)
+                dead.append(Measurement(candidate=cand,
+                                        us_per_call=float("inf"),
+                                        predicted_us=predicted, ok=False,
+                                        error=repr(e)))
+                continue
+            built.append((cand, predicted, ok, run))
+            runs[cand] = run
+        sp_build.set(built=len(built), dead=len(dead))
     if not built:
         raise RuntimeError(
             "autotune: every ranked candidate failed to build "
@@ -446,6 +485,8 @@ def autotune(seed: CodeSeed, access: dict, out_len: int, data_len: int,
                     candidate=cand, us_per_call=float("inf"),
                     predicted_us=predicted, ok=False, error=repr(err)))
             else:
+                if np.isfinite(us):
+                    _metrics.observe("tune.candidate_us", float(us))
                 measurements.append(Measurement(
                     candidate=cand, us_per_call=us,
                     predicted_us=predicted, ok=ok))

@@ -19,13 +19,13 @@ _EXAMPLES = ("quickstart.py", "spmv_pagerank.py", "graph_apps.py",
              "sharded_spmv.py")
 
 
-def _run_example(name: str) -> subprocess.CompletedProcess:
+def _run_example(name: str, *args: str) -> subprocess.CompletedProcess:
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = os.path.join(_REPO, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     return subprocess.run(
-        [sys.executable, os.path.join(_REPO, "examples", name)],
+        [sys.executable, os.path.join(_REPO, "examples", name), *args],
         env=env, capture_output=True, text=True, timeout=600)
 
 
@@ -37,6 +37,27 @@ def test_example_runs_clean(name):
         f"--- stdout ---\n{proc.stdout[-2000:]}\n"
         f"--- stderr ---\n{proc.stderr[-2000:]}")
     assert proc.stdout.strip(), f"examples/{name} printed nothing"
+
+
+def test_telemetry_example_writes_valid_artifacts(tmp_path):
+    # telemetry.py takes its artifact paths as argv so the test (and CI)
+    # control where the trace/report land.
+    import json
+    trace_path = tmp_path / "trace.json"
+    report_path = tmp_path / "report.json"
+    proc = _run_example("telemetry.py", str(trace_path), str(report_path))
+    assert proc.returncode == 0, (
+        f"examples/telemetry.py failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")
+    assert "OK" in proc.stdout
+    payload = json.loads(trace_path.read_text())
+    assert payload["traceEvents"]
+    names = {ev["name"] for ev in payload["traceEvents"]}
+    assert {"app.spmv.build", "plan.build", "ir.lower",
+            "tune.autotune", "engine.execute"} <= names
+    report = json.loads(report_path.read_text())
+    assert report["launches"] and report["totals"]["flops"] > 0
 
 
 def test_quickstart_reports_ok():
