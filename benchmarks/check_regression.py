@@ -19,7 +19,11 @@ identity columns:
 * ``speedup_vs_shards1`` (the sharded-execution trajectory — per-shard-
   count SpMV sweep time relative to the single-device baseline timed in
   the same paired round, DESIGN.md §10; rows come from
-  ``benchmarks.run --sharded`` / ``BENCH_shard.json``).
+  ``benchmarks.run --sharded`` / ``BENCH_shard.json``), and
+* ``speedup_vs_naive`` (the query-serving trajectory — continuous-
+  batching engine QPS relative to naive sequential dispatch of the same
+  request stream measured in the same process, DESIGN.md §12; rows come
+  from ``benchmarks.run --serve`` / ``BENCH_serve.json``).
 
 The guard fails if any matched row's new speedup is below ``min-ratio`` x
 its previous value.  Ratios of speedups (not raw microseconds) are
@@ -61,7 +65,7 @@ import json
 import sys
 
 METRICS = ("speedup_vs_per_class", "run_speedup_vs_host",
-           "speedup_vs_shards1")
+           "speedup_vs_shards1", "speedup_vs_naive")
 _KEYS = ("bench", "dataset", "mode", "backend", "app", "driver",
          "lane_width", "shards")
 

@@ -126,6 +126,28 @@ def run_graph_mode(args) -> None:
         _write_json(args.json, "bench_graph.v2", args.scale, rows)
 
 
+def run_serve_mode(args) -> None:
+    """Query-serving mode: continuous batching vs naive dispatch and
+    2x-overload shedding (BENCH_serve.json rows; DESIGN.md §12)."""
+    from benchmarks.serve_bench import bench_serve
+
+    print("name,us_per_call,derived")
+    rows = bench_serve(scale=args.scale)
+    for r in rows:
+        name = f"serve_{r['dataset']}_{r['app']}_{r['mode']}"
+        if r["mode"] == "overload2x":
+            detail = (f"offered={r['offered']};served={r['served']};"
+                      f"shed={r['shed']};shed_rate={r['shed_rate']}")
+        else:
+            detail = (f"qps={r['qps']};p50={r['p50_ms']}ms;"
+                      f"p99={r['p99_ms']}ms")
+            if "speedup_vs_naive" in r:
+                detail += f";vs_naive={r['speedup_vs_naive']:.2f}x"
+        print(f"{name},0,{detail}")
+    if args.json:
+        _write_json(args.json, "bench_serve.v1", args.scale, rows)
+
+
 def run_sharded_mode(args) -> None:
     """Sharded-execution mode: SpMV sweep time vs shard count
     (BENCH_shard.json rows; DESIGN.md §10)."""
@@ -150,6 +172,10 @@ def main() -> None:
     ap.add_argument("--graphs", action="store_true",
                     help="graph-application mode (BFS/SSSP/CC; "
                          "BENCH_graph.json)")
+    ap.add_argument("--serve", action="store_true",
+                    help="query-serving mode: continuous batching vs "
+                         "naive dispatch + 2x-overload shedding "
+                         "(BENCH_serve.json; DESIGN.md §12)")
     ap.add_argument("--sharded", action="store_true",
                     help="sharded-execution mode: SpMV sweep time vs "
                          "shard count {1,2,4,8} (BENCH_shard.json; run "
@@ -171,6 +197,9 @@ def main() -> None:
             pass
     if args.graphs:
         run_graph_mode(args)
+        return
+    if args.serve:
+        run_serve_mode(args)
         return
     if args.sharded:
         run_sharded_mode(args)

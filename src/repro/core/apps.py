@@ -58,6 +58,12 @@ class SpMV:
     # cached zero y_init per dtype: repeated matvecs share one device
     # constant instead of allocating a fresh jnp.zeros per call
     _y0: dict = dataclasses.field(default_factory=dict, repr=False)
+    # cached vmapped batched-matvec program + the distinct batch shapes
+    # it has specialized on (compile-count accounting, mirrored into the
+    # ``spmv.batched_shapes`` counter)
+    _vrun: object = dataclasses.field(default=None, repr=False)
+    _batched_shapes: set = dataclasses.field(default_factory=set,
+                                             repr=False)
 
     @classmethod
     def from_coo(cls, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -190,6 +196,44 @@ class SpMV:
                 y_init = self._y0[key] = jnp.zeros(self.shape[0],
                                                    dtype=x.dtype)
         return self._run({"x": x}, y_init)
+
+    def matvec_many(self, xs, bucket: bool = True) -> jnp.ndarray:
+        """Batched matvec: ONE vmapped dispatch over ``S`` stacked input
+        vectors ``(S, n) -> (S, m)`` — the serving layer's batch entry
+        (S requests' worth of work from one plan and one compiled
+        program).  ``bucket=True`` (default) pads ``S`` up the
+        :data:`~repro.core.graphs.BATCH_BUCKETS` ladder by replicating
+        the last row (sliced off the result), so distinct arrival counts
+        share compiled programs instead of retracing per ``S``.  Row
+        ``i`` is bitwise-equal to ``matvec(xs[i])``: vmap batches the
+        same per-row program, gather order and reduce tree unchanged."""
+        from repro.core.graphs import pad_to_bucket
+        if self._shard_parts:
+            raise NotImplementedError(
+                "matvec_many on a sharded SpMV (vmap over shard_map); "
+                "build without mesh=/shards= for batched serving")
+        xs = np.asarray(xs)
+        if xs.ndim != 2 or xs.shape[1] != self.shape[1]:
+            raise ValueError(
+                f"matvec_many expects (S, {self.shape[1]}) inputs, "
+                f"got {xs.shape}")
+        n = xs.shape[0]
+        if bucket:
+            xs, n = pad_to_bucket(xs)
+        if self._vrun is None:
+            body = getattr(self._run, "sweep_body", None) or self._run
+            self._vrun = jax.jit(jax.vmap(
+                lambda x, y0: body({"x": x}, y0), in_axes=(0, None)))
+        key = (xs.shape[0], np.dtype(xs.dtype).str)
+        if key not in self._batched_shapes:
+            self._batched_shapes.add(key)
+            from repro.obs import metrics as _metrics
+            _metrics.inc("spmv.batched_shapes")
+        y0 = self._y0.get(np.dtype(xs.dtype).str)
+        if y0 is None:
+            y0 = self._y0[np.dtype(xs.dtype).str] = jnp.zeros(
+                self.shape[0], dtype=xs.dtype)
+        return self._vrun(jnp.asarray(xs), y0)[:n]
 
     def report(self):
         """Structured :class:`~repro.obs.profile.RunReport`: plan stats,

@@ -85,6 +85,63 @@ class ConvergenceReport:
     negative_cycle: bool = False
 
 
+# Batch-size bucket ladder for the batched multi-source entry points.
+# ``jax.jit`` re-specializes per state SHAPE, so serving S sources per
+# request used to compile one whole convergence program per DISTINCT S —
+# a serving engine batching 3, then 5, then 7 requests paid three traces
+# for one logical program.  Rounding every batch up the ladder (and
+# slicing the padded rows off the result) caps the number of compiled
+# programs at ``len(BATCH_BUCKETS)`` plus one per top-rung multiple.
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def bucket_size(n: int, ladder: tuple = BATCH_BUCKETS) -> int:
+    """Round a batch count up to the bucket ladder (powers of two by
+    default); above the top rung, round up to a multiple of it.  The
+    padding rows replicate real work and are sliced off, so results are
+    unchanged — only the compile count drops."""
+    if n <= 0:
+        raise ValueError(f"batch count must be positive, got {n}")
+    for b in ladder:
+        if n <= b:
+            return int(b)
+    top = int(ladder[-1])
+    return ((n + top - 1) // top) * top
+
+
+def bucket_ladder_upto(n: int, ladder: tuple = BATCH_BUCKETS) -> list:
+    """Every distinct batch size the bucket padding can produce for
+    request counts in ``1..n`` — the shapes a serving warmup must
+    pre-trace so no live batch hits a cold compile."""
+    top = bucket_size(n, ladder)
+    return [int(b) for b in ladder if b <= top] + (
+        [top] if top > ladder[-1] else [])
+
+
+def pad_to_bucket(batch: np.ndarray, ladder: tuple = BATCH_BUCKETS
+                  ) -> tuple[np.ndarray, int]:
+    """Pad ``batch`` (leading axis = requests) up to :func:`bucket_size`
+    by replicating the last row.  Returns ``(padded, original_count)``;
+    callers slice ``result[:original_count]``.  Replicating a REAL row
+    (never zeros) keeps padded fixpoint rows on the same convergence
+    trajectory as their source row, so padding can never add sweeps."""
+    batch = np.asarray(batch)
+    s = batch.shape[0]
+    b = bucket_size(s, ladder)
+    if b == s:
+        return batch, s
+    pad = np.repeat(batch[-1:], b - s, axis=0)
+    return np.concatenate([batch, pad], axis=0), s
+
+
+def batched_shape_count() -> int:
+    """Total DISTINCT batched state shapes that entered a resident/host
+    batched convergence across all fixpoint apps — each one is (at most)
+    one jit specialization, so tests pin compile counts against it.
+    Backed by the process-wide ``graphs.batched_shapes`` counter."""
+    return int(_metrics.value("graphs.batched_shapes"))
+
+
 def plan_build_count() -> int:
     """Total ``build_plan`` invocations made by this module — benchmarks
     and tests assert one per graph across all sweeps (plan reuse).
@@ -211,6 +268,12 @@ class _FixpointApp:
     _static: dict = dataclasses.field(default_factory=dict, repr=False)
     # jitted resident converge programs, keyed by single/batched step
     _resident: dict = dataclasses.field(default_factory=dict, repr=False)
+    # distinct batched state shapes this app has converged — each is one
+    # jit specialization, mirrored into the ``graphs.batched_shapes``
+    # counter so tests can pin compile counts (bucket padding keeps this
+    # bounded by the ladder, not by the number of distinct batch sizes)
+    _batched_shapes: set = dataclasses.field(default_factory=set,
+                                             repr=False)
 
     # SSSP overrides: exhaustion at >= num_nodes + 1 synchronous sweeps
     # proves a reachable negative cycle (Bellman-Ford), nothing else does
@@ -391,6 +454,11 @@ class _FixpointApp:
         if step is not None:
             driver = "host"
         self.convergence = ConvergenceReport()
+        if batched:
+            shape_key = (tuple(state.shape), str(state.dtype))
+            if shape_key not in self._batched_shapes:
+                self._batched_shapes.add(shape_key)
+                _metrics.inc("graphs.batched_shapes")
         if self._shard_parts and batched:
             raise NotImplementedError(
                 "batched multi-source runs are not supported on a sharded "
@@ -584,18 +652,28 @@ class BFS(_FixpointApp):
         lv = np.asarray(state)
         return np.where(lv >= UNREACHED, -1, lv).astype(np.int32)
 
-    def run_multi(self, sources, max_sweeps: int | None = None) -> np.ndarray:
+    def run_multi(self, sources, max_sweeps: int | None = None,
+                  bucket: bool = True) -> np.ndarray:
         """Batched multi-source BFS: one ``vmap``-ed sweep over all sources
         simultaneously — S plans' worth of work from ONE plan and one jitted
         program (XLA backend).  Under the resident driver the vmapped sweep
         is the ``while_loop`` body and convergence is equality over the full
         (S, num_nodes) batch — all sources converge together, exactly the
         host driver's semantics.  Returns (S, num_nodes) levels, -1 where
-        unreachable."""
+        unreachable.
+
+        ``bucket=True`` (default) pads the source count up the
+        :data:`BATCH_BUCKETS` ladder (replicating the last source) and
+        slices the result back, so distinct arrival counts share compiled
+        programs instead of retracing per S (``bucket=False`` restores
+        the exact-shape behavior)."""
         sources = np.asarray(sources)
+        n = sources.shape[0]
+        if bucket:
+            sources, n = pad_to_bucket(sources)
         state = self._converge(self._init_levels(sources), max_sweeps,
                                batched=True)
-        lv = np.asarray(state)
+        lv = np.asarray(state)[:n]
         return np.where(lv >= UNREACHED, -1, lv).astype(np.int32)
 
 
@@ -685,6 +763,28 @@ class SSSP(_FixpointApp):
         dist[source] = 0.0
         state = self._converge(jnp.asarray(dist), max_sweeps)
         return np.asarray(state)
+
+    def _init_dists(self, sources: np.ndarray) -> jnp.ndarray:
+        d = np.full((sources.shape[0], self.num_nodes), np.inf, np.float32)
+        d[np.arange(sources.shape[0]), sources] = 0.0
+        return jnp.asarray(d)
+
+    def run_multi(self, sources, max_sweeps: int | None = None,
+                  bucket: bool = True) -> np.ndarray:
+        """Batched multi-source Bellman-Ford: one vmapped sweep relaxes
+        all sources' distance rows simultaneously (same semantics as
+        :meth:`BFS.run_multi` — convergence is equality over the whole
+        (S, num_nodes) batch).  ``bucket=True`` pads the source count up
+        the :data:`BATCH_BUCKETS` ladder so distinct arrival counts share
+        compiled programs.  Returns (S, num_nodes) float32 distances,
+        ``inf`` where unreachable."""
+        sources = np.asarray(sources)
+        n = sources.shape[0]
+        if bucket:
+            sources, n = pad_to_bucket(sources)
+        state = self._converge(self._init_dists(sources), max_sweeps,
+                               batched=True)
+        return np.asarray(state)[:n]
 
 
 @dataclasses.dataclass

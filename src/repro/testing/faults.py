@@ -18,6 +18,13 @@ patches restore on exit, even when the body raises.  The non-filesystem
 faults (:func:`backend_failure`, :func:`measurement_failure`,
 :func:`timing_outliers`) patch ``repro``-internal hooks and stay
 process-wide; don't run two of those concurrently.
+
+:func:`slow_calls` injects *latency* instead of failure — on a path
+(thread-scoped, like the fs injectors) or on an ``(obj, "attr")`` call
+site (process-wide: the serving dispatcher thread is the caller under
+test) — and, combined with a :class:`VirtualClock` handed to the
+serving engine, makes deadline/straggler/circuit-breaker behavior
+deterministic with no real sleeps in the hot path.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import errno
 import os
 import tempfile
 import threading
+import time
 
 
 def _under(root, p) -> bool:
@@ -166,6 +174,90 @@ def torn_writes(root, keep: float = 0.5):
         yield
     finally:
         os.replace = real_replace
+
+
+class VirtualClock:
+    """A monotonic clock under test control: ``clock()`` reads it,
+    ``advance()`` moves it.  The serving engine takes ``clock=`` at
+    construction, so deadline/straggler/breaker timing runs against
+    virtual seconds — :func:`slow_calls` advances this clock instead of
+    sleeping, keeping latency tests deterministic with zero real sleeps
+    in the measured path."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        with self._lock:
+            self._t += float(dt)
+            return self._t
+
+
+def _apply_delay(delay_s: float, clock) -> None:
+    if clock is not None and hasattr(clock, "advance"):
+        clock.advance(delay_s)
+    else:
+        time.sleep(delay_s)
+
+
+@contextlib.contextmanager
+def slow_calls(path_or_fn, delay_s: float, *, clock=None):
+    """Latency injection: every matching call appears ``delay_s``
+    seconds slower.
+
+    ``path_or_fn`` selects the injection site:
+
+    * a **directory path** — ``open()`` calls under it are delayed,
+      path- and thread-scoped exactly like the fs fault injectors
+      (slow NFS / cold page cache on a cache dir);
+    * an ``(obj, "attr")`` **pair** — ``obj.attr`` is rebound to a
+      delaying wrapper for the duration.  This patch is process-wide on
+      purpose: the serving engine's dispatcher thread (not the test
+      thread) is the caller whose latency is under test.
+
+    With ``clock=`` a :class:`VirtualClock`, the delay ADVANCES the
+    clock instead of sleeping — deadline/straggler/breaker paths become
+    deterministically testable without real sleeps in the hot path."""
+    if isinstance(path_or_fn, tuple):
+        obj, name = path_or_fn
+        real = getattr(obj, name)
+
+        def slowed(*a, **k):
+            out = real(*a, **k)
+            _apply_delay(delay_s, clock)
+            return out
+
+        def _set(value):
+            try:
+                setattr(obj, name, value)
+            except AttributeError:      # frozen dataclass (e.g. Endpoint)
+                object.__setattr__(obj, name, value)
+
+        _set(slowed)
+        try:
+            yield
+        finally:
+            _set(real)
+        return
+
+    real_open = builtins.open
+    hit = _scoped(path_or_fn)
+
+    def open_(file, *a, **k):
+        if hit(file):
+            _apply_delay(delay_s, clock)
+        return real_open(file, *a, **k)
+
+    builtins.open = open_
+    try:
+        yield
+    finally:
+        builtins.open = real_open
 
 
 @contextlib.contextmanager

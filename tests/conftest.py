@@ -1,0 +1,54 @@
+"""Shared test configuration: hang-guard fallback for bare environments.
+
+pyproject.toml sets ``timeout`` / ``timeout_method`` for pytest-timeout
+(the CI hang guard — a deadlocked concurrency test must fail in seconds
+with a stack trace, not eat the job timeout).  On environments without
+the plugin those ini options would be unknown (config warning, no
+guard), so this conftest degrades gracefully:
+
+* it registers the two ini options itself, silencing the unknown-option
+  warning, and
+* arms a ``faulthandler.dump_traceback_later`` watchdog around every
+  test — if a test outlives the timeout, every thread's stack is dumped
+  to stderr and the process exits non-zero (coarser than pytest-timeout,
+  which fails just the one test, but the diagnostic is the same).
+
+When pytest-timeout IS installed, this file does nothing.
+"""
+from __future__ import annotations
+
+import faulthandler
+
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PLUGIN = True
+except ImportError:
+    _HAVE_PLUGIN = False
+
+
+def pytest_addoption(parser):
+    if _HAVE_PLUGIN:
+        return
+    parser.addini("timeout", "fallback per-test timeout in seconds "
+                  "(pytest-timeout not installed)", default=None)
+    parser.addini("timeout_method", "ignored by the fallback (kept so "
+                  "pyproject.toml parses cleanly)", default="thread")
+
+
+def pytest_runtest_protocol(item):
+    if _HAVE_PLUGIN:
+        return None
+    try:
+        timeout = float(item.config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        timeout = 0.0
+    if timeout > 0:
+        # dump ALL thread stacks and kill the process if the test hangs;
+        # cancelled in pytest_runtest_teardown below on normal completion
+        faulthandler.dump_traceback_later(timeout, exit=True)
+    return None
+
+
+def pytest_runtest_teardown(item):
+    if not _HAVE_PLUGIN:
+        faulthandler.cancel_dump_traceback_later()

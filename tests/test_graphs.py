@@ -207,3 +207,61 @@ def test_cc_matches_scipy(kind):
     for cid in range(ncomp):
         members = np.nonzero(comp == cid)[0]
         assert (labels[members] == members.min()).all()
+
+
+def test_bucket_ladder_unit():
+    assert [GR.bucket_size(n) for n in (1, 2, 3, 4, 5, 8, 9, 16, 17)] \
+        == [1, 2, 4, 4, 8, 8, 16, 16, 32]
+    assert GR.bucket_size(128) == 128
+    assert GR.bucket_size(129) == 256        # beyond the ladder: top-multiple
+    assert GR.bucket_size(300) == 384
+    with pytest.raises(ValueError):
+        GR.bucket_size(0)
+    padded, n = GR.pad_to_bucket(np.arange(6))
+    assert n == 6 and padded.shape == (8,)
+    np.testing.assert_array_equal(padded[6:], [5, 5])   # last-row replication
+
+
+def test_multi_source_bucket_padding_caps_recompiles():
+    """Regression: distinct source counts must NOT each trigger a fresh
+    batched trace.  S in {3, 5, 6, 7} pads to buckets {4, 8, 8, 8} —
+    exactly TWO new batched shapes, and every padded run still slices
+    back to bitwise-correct per-source rows."""
+    c = G.graph_case("powerlaw", 192, 6)
+    app = GR.BFS.from_edges(c.src, c.dst, c.num_nodes, lane_width=16)
+    before = GR.batched_shape_count()
+    refs = {s: GR.bfs_reference(c.src, c.dst, c.num_nodes, s)
+            for s in range(8)}
+    for count in (3, 5, 6, 7):
+        sources = list(range(count))
+        out = app.run_multi(sources)
+        assert out.shape == (count, c.num_nodes)     # padding sliced away
+        for i, s in enumerate(sources):
+            np.testing.assert_array_equal(out[i], refs[s])
+    assert GR.batched_shape_count() == before + 2    # buckets 4 and 8 only
+
+
+def test_multi_source_sssp_bucketed():
+    c = G.graph_case("powerlaw", 192, 6)
+    app = GR.SSSP.from_edges(c.src, c.dst, c.weight, c.num_nodes,
+                             lane_width=16)
+    out = app.run_multi([0, 5, 9])
+    assert out.shape == (3, c.num_nodes)
+    for i, s in enumerate([0, 5, 9]):
+        np.testing.assert_allclose(
+            out[i], GR.sssp_reference(c.src, c.dst, c.weight,
+                                      c.num_nodes, s),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_spmv_matvec_many_bucketed():
+    from repro.core.apps import SpMV
+    m = G.power_law(160, 5, seed=4)
+    app = SpMV.from_coo(m.rows, m.cols, m.vals, m.shape)
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal((5, m.shape[1])).astype(np.float32)
+    ys = np.asarray(app.matvec_many(xs))
+    assert ys.shape == (5, m.shape[0])               # bucket-8 pad sliced
+    for i in range(5):
+        np.testing.assert_array_equal(
+            ys[i], np.asarray(app.matvec(jnp.asarray(xs[i]))))
