@@ -23,7 +23,12 @@ identity columns:
 * ``speedup_vs_naive`` (the query-serving trajectory — continuous-
   batching engine QPS relative to naive sequential dispatch of the same
   request stream measured in the same process, DESIGN.md §12; rows come
-  from ``benchmarks.run --serve`` / ``BENCH_serve.json``).
+  from ``benchmarks.run --serve`` / ``BENCH_serve.json``), and
+* ``pallas_speedup_vs_jax`` (the Pallas real-compile trajectory —
+  window/dense-slice kernel time relative to the fused jax executor
+  timed in the same paired round, DESIGN.md §13; rows come from
+  ``benchmarks.run --pallas`` on a TPU/GPU machine — off-accelerator
+  the bench skips loudly and emits no rows).
 
 The guard fails if any matched row's new speedup is below ``min-ratio`` x
 its previous value.  Ratios of speedups (not raw microseconds) are
@@ -65,9 +70,10 @@ import json
 import sys
 
 METRICS = ("speedup_vs_per_class", "run_speedup_vs_host",
-           "speedup_vs_shards1", "speedup_vs_naive")
+           "speedup_vs_shards1", "speedup_vs_naive",
+           "pallas_speedup_vs_jax")
 _KEYS = ("bench", "dataset", "mode", "backend", "app", "driver",
-         "lane_width", "shards")
+         "lane_width", "shards", "coalesce")
 
 # distinct exit codes: CI logs say WHAT failed without reading the table
 EXIT_OK = 0

@@ -293,6 +293,63 @@ def bench_spmv_exec(scale="small", lane: int = 128, iters: int = 5,
     return rows
 
 
+def bench_spmv_pallas(scale="small", lane: int = 128, iters: int = 5,
+                      rounds: int = 40) -> tuple[list[dict], str | None]:
+    """Pallas-backend SpMV trajectory rows (``benchmarks.run --pallas``).
+
+    Returns ``(rows, skip_reason)``.  Real-compile timings only: on a
+    machine whose default backend is CPU the rows are skipped with a
+    loud reason instead of silently timing interpret mode (INTERPRET_
+    SCALE-slow and not wall-clock comparable, DESIGN.md §13).  On an
+    accelerator each dataset is timed paired against the fused jax
+    executor — mode ``pallas_fused`` (window kernels) and
+    ``pallas_coalesced`` (dense-slice kernels, bitwise-equal by
+    construction) — and the guarded metric is ``pallas_speedup_vs_jax``.
+    """
+    if jax.default_backend() not in ("tpu", "gpu"):
+        return [], (f"default backend is {jax.default_backend()!r} — "
+                    "pallas rows need a real TPU/GPU compile; interpret "
+                    "timings are not wall-clock comparable (the pallas "
+                    "correctness matrix runs in CI via pytest -m pallas)")
+    from repro.tune.search import measure_paired
+    rng = np.random.default_rng(0)
+    rows = []
+    for m in corpus(scale):
+        plan = build_plan(spmv_seed(),
+                          {"row": np.asarray(m.rows),
+                           "col": np.asarray(m.cols)},
+                          m.shape[0], m.shape[1],
+                          CostModel(lane_width=lane))
+        coalesced_frac = ir.coalesce_stats(plan)["coalesced_fraction"]
+        x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+        y0 = jnp.zeros(m.shape[0], jnp.float32)
+        vals = {"value": np.asarray(m.vals)}
+        runs = {
+            "jax_fused": eng.make_executor(plan, vals, backend="jax",
+                                           fused=True),
+            "pallas_fused": eng.make_executor(plan, vals, backend="pallas",
+                                              fused=True),
+            "pallas_coalesced": eng.make_executor(
+                plan, vals, backend="pallas", fused=True, coalesce=True),
+        }
+        modes = list(runs)
+        ts = measure_paired([runs[k] for k in modes], {"x": x}, y0,
+                            warmup=1, iters=iters, rounds=rounds,
+                            ref_index=0)
+        times = dict(zip(modes, ts))
+        for mode in ("pallas_fused", "pallas_coalesced"):
+            rows.append({
+                "bench": "spmv_pallas", "dataset": m.name, "nnz": m.nnz,
+                "lane_width": lane, "backend": "pallas", "mode": mode,
+                "coalesce": mode == "pallas_coalesced",
+                "us_per_call": round(times[mode], 2),
+                "coalesced_fraction": coalesced_frac,
+                "pallas_speedup_vs_jax":
+                    round(times["jax_fused"] / times[mode], 3),
+            })
+    return rows, None
+
+
 def bench_plan_build(nnz: int = 1_000_000, out_len: int = 100_000,
                      lanes=(8, 128)) -> list[dict]:
     """Plan-build trajectory on a 1M-nnz synthetic: the per-block blake2b

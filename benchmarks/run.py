@@ -241,6 +241,18 @@ def main() -> None:
             print(f"table8_{name}_iu_pallas_interpret,{t_pl:.1f},"
                   f"interpret-mode (not wall-clock-comparable)")
 
+    # ---- pallas real-compile trajectory (skips loudly off-accelerator)
+    pallas_rows: list = []
+    if args.pallas:
+        pallas_rows, skip = T.bench_spmv_pallas(scale=args.scale)
+        if skip is not None:
+            print(f"spmv_pallas_skipped,0,reason={skip}", file=sys.stderr)
+        for r in pallas_rows:
+            print(f"spmv_pallas_{r['dataset']}_{r['mode']},"
+                  f"{r['us_per_call']:.1f},"
+                  f"{r['pallas_speedup_vs_jax']:.2f}x_vs_jax;"
+                  f"coalesced={r['coalesced_fraction']:.2f}")
+
     # ---- fused vs per-class vs tuned-auto executor + plan-build trajectory
     exec_rows = T.bench_spmv_exec(scale=args.scale, tuned=args.tuned,
                                   tune_cache_dir=args.tune_cache)
@@ -262,7 +274,7 @@ def main() -> None:
 
     if args.json:
         _write_json(args.json, "bench_spmv.v1", args.scale,
-                    exec_rows + build_rows)
+                    exec_rows + build_rows + pallas_rows)
 
     # ---- roofline table from dry-run artifacts (if present)
     try:

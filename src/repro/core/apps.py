@@ -77,6 +77,7 @@ class SpMV:
                  tune: bool = False,
                  tune_cache_dir: str | None = None,
                  validate: str = "strict",
+                 allow_interpret: bool = False,
                  mesh=None, shards: int | None = None) -> "SpMV":
         """``backend="auto"`` (or ``tune=True``) selects the execution
         variant per matrix via :mod:`repro.tune` — measured on this
@@ -96,7 +97,13 @@ class SpMV:
         to single-device execution.  Under ``backend="auto"`` the shard
         count becomes a *tuned axis* (the space gains ``{1, shards}``
         candidates and the measured winner decides); an explicit
-        ``mesh`` cannot be combined with the tuner."""
+        ``mesh`` cannot be combined with the tuner.
+
+        ``allow_interpret=True`` admits interpret-mode Pallas candidates
+        into the tuned space off-accelerator (excluded by default —
+        interpret timings are not wall-clock comparable; the tuning
+        cache key folds the platform, so an interpret winner can never
+        replay as an accelerator choice)."""
         with _trace.span("app.spmv.build", backend=backend,
                          nnz=int(np.asarray(vals).size)):
             return cls._from_coo(
@@ -104,12 +111,14 @@ class SpMV:
                 backend=backend, cost=cost, fused=fused, stage_b=stage_b,
                 coalesce=coalesce, plan_cache_dir=plan_cache_dir,
                 tune=tune, tune_cache_dir=tune_cache_dir,
-                validate=validate, mesh=mesh, shards=shards)
+                validate=validate, allow_interpret=allow_interpret,
+                mesh=mesh, shards=shards)
 
     @classmethod
     def _from_coo(cls, rows, cols, vals, shape, *, lane_width, backend,
                   cost, fused, stage_b, coalesce, plan_cache_dir, tune,
-                  tune_cache_dir, validate, mesh, shards) -> "SpMV":
+                  tune_cache_dir, validate, allow_interpret, mesh,
+                  shards) -> "SpMV":
         seed = spmv_seed()
         rows, cols, vals, vreport = validation.validate_coo(
             rows, cols, np.asarray(vals), shape, policy=validate)
@@ -137,7 +146,8 @@ class SpMV:
                     lane_widths=(lane_width,),
                     shard_counts=shard_counts,
                     tune_cache_dir=tune_cache_dir,
-                    plan_cache_dir=plan_cache_dir)
+                    plan_cache_dir=plan_cache_dir,
+                    allow_interpret=allow_interpret)
                 app = cls(plan=plan, shape=shape, _run=run,
                           dtype=vals.dtype, tuning=result,
                           mesh=getattr(run, "mesh", None),

@@ -394,7 +394,8 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                  backend: str = "jax", interpret: bool | None = None,
                  fused: bool = True, stage_b: str = "auto",
                  elem_exec: Mapping[str, jnp.ndarray] | None = None,
-                 coalesce: bool = False, tree: ir.CodeTree | None = None):
+                 coalesce: bool = False, tree: ir.CodeTree | None = None,
+                 kernel_params: Mapping[str, int] | None = None):
     """The raw sweep body ``fn(mutable: dict, out_init) -> out`` — the same
     stage-A/stage-B program :func:`make_executor` jits, without the jit
     boundary, for embedding inside ``lax.while_loop`` / ``fori_loop``
@@ -508,12 +509,15 @@ def make_sweeper(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         return run_ss
 
     if backend == "pallas":
+        from repro.kernels import common as kcommon
         from repro.kernels.unroll_spmv import ops as kops
-        if interpret is None:
-            interpret = jax.devices()[0].platform != "tpu"
+        # interpret=None platform-resolves: real compile on TPU/GPU,
+        # interpret mode only on CPU or by explicit request (DESIGN.md §13)
+        interpret = kcommon.resolve_interpret(interpret)
         stage_a = kops.make_stage_a(plan, meta, elem_exec,
                                     interpret=interpret,
-                                    launches=tree.launches)
+                                    launches=tree.launches,
+                                    kernel_params=kernel_params)
 
         def run_pl(mutable, out_init):
             lanes = stage_a(mutable)
@@ -530,7 +534,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
                   fuse_classes: bool | None = None,
                   elem_exec: Mapping[str, jnp.ndarray] | None = None,
                   donate: bool = False, coalesce: bool = False,
-                  tree: ir.CodeTree | None = None):
+                  tree: ir.CodeTree | None = None,
+                  kernel_params: Mapping[str, int] | None = None):
     """Build a jitted executor ``fn(mutable: dict, out_init) -> out``.
 
     ``static_data`` holds the seed's *elementwise* (immutable, nnz-aligned)
@@ -545,7 +550,11 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
     ``"gather"`` (head re-gather from the flat lane stream), ``"dense"``
     (scatter the full lane stream through the precomputed dense head-row
     buffer), or ``"auto"`` (the collision-free gather form).  ``coalesce``
-    enables the gather-coalescing lowering pass (DESIGN.md §8).
+    enables the gather-coalescing lowering pass (DESIGN.md §8) on both the
+    jax and pallas backends (the latter lowers COALESCED launches to the
+    dense-slice kernel, DESIGN.md §13).  ``kernel_params`` carries the
+    tuned Pallas kernel knobs (``rows_per_step``, ``meta_prefetch``);
+    ignored by the XLA backends.
 
     ``donate=True`` jit-donates ``out_init``: a fixpoint driver that
     ping-pongs two buffers then reuses storage in place instead of
@@ -570,7 +579,8 @@ def make_executor(plan: BlockPlan, static_data: Mapping[str, np.ndarray],
         fused = fuse_classes
     body = make_sweeper(plan, static_data, backend=backend,
                         interpret=interpret, fused=fused, stage_b=stage_b,
-                        elem_exec=elem_exec, coalesce=coalesce, tree=tree)
+                        elem_exec=elem_exec, coalesce=coalesce, tree=tree,
+                        kernel_params=kernel_params)
     jitted = jax.jit(body, donate_argnums=(1,) if donate else ())
 
     def run(mutable, out_init):

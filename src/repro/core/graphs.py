@@ -170,7 +170,8 @@ _TUNE_RUN_SWEEPS = 8
 def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
                     state_key: str, state_example, plan_cache_dir,
                     tune_cache_dir, lane_width: int = 128,
-                    driver: str = "resident"):
+                    driver: str = "resident",
+                    allow_interpret: bool = False):
     """Input-adaptive variant selection for a graph app.  The convergence
     driver reuses the winning executor for every sweep — the amortization
     story is unchanged, only the variant choice became per-input.
@@ -203,6 +204,7 @@ def _autotune_build(seed: CodeSeed, access, num_nodes, static_data,
         {state_key: state_example}, state_example,
         lane_widths=(lane_width,),
         plan_cache_dir=plan_cache_dir, tune_cache_dir=tune_cache_dir,
+        allow_interpret=allow_interpret,
         measure_wrap=measure_wrap, cache_extra=cache_extra)
     _metrics.inc("graphs.plan_builds", result.plans_built)
     return plan, run, result

@@ -301,10 +301,14 @@ def coalesce_gathers(tree: CodeTree,
     program is bitwise-equal to its un-coalesced form, which the tests pin
     against the scatter oracle.  ``stream`` launches qualify trivially
     (an aligned identity run IS a contiguous run — they lower to the pure
-    slice form with no permutation); the Pallas backend keeps its own
-    window DMA path (the pass is an XLA-lowering concern).
+    slice form with no permutation).  Both lane-granular emitters consume
+    the rewritten launches: the XLA path as vmapped ``dynamic_slice``
+    tiles, the Pallas path as the dense-slice kernel (one unaligned
+    ``pl.ds`` vector load + static in-tile permute per block, DESIGN.md
+    §13); only segsum skips the pass (its stage A is already one fold).
     """
-    if tree.backend not in ("jax",) or tree.seed.gather_index is None:
+    if tree.backend not in ("jax", "pallas") \
+            or tree.seed.gather_index is None:
         return tree._after_pass("coalesce_gathers:skip",
                                 len(tree.launches))
     plan = tree.plan
@@ -345,8 +349,13 @@ def _split_launch(launch: Launch, runs: ft.GatherRunFeatures,
     edges = np.concatenate([[0], bounds, [n_blocks]])
     parts = []
     for lo, hi in zip(edges[:-1], edges[1:]):
-        sub = dataclasses.replace(launch, start=launch.start + int(lo),
-                                  stop=launch.start + int(hi))
+        # per-block arrays must follow the block range: a fused Pallas
+        # section carries (Bc,) native-reduce flags on full_mask
+        mask = launch.full_mask
+        sub = dataclasses.replace(
+            launch, start=launch.start + int(lo),
+            stop=launch.start + int(hi),
+            full_mask=None if mask is None else mask[lo:hi])
         if keep[lo]:
             base = runs.base[lo:hi]
             off = None

@@ -12,9 +12,10 @@ There is no separate SpMM executor any more: ``from_coo`` builds the same
 ``engine.make_executor`` the SpMV path uses, which means SpMM gets the
 full semiring reduce set (``reduce="min"/"max"/"mul"``), the fused /
 per-class launch lists, the segsum backend, the gather-coalescing pass,
-and ``backend="auto"`` input-adaptive tuning — all from one pipeline.
-The Pallas emitter is rank-1-only (its kernels carry scalar lanes), so
-``backend="pallas"`` is rejected loudly.
+``backend="pallas"`` (the kernel ladder is rank-polymorphic over
+trailing lane axes too — BlockSpecs carry the trailing shape and the
+lane metadata broadcasts, DESIGN.md §13), and ``backend="auto"``
+input-adaptive tuning — all from one pipeline.
 
 Reuses the 1-D BlockPlan verbatim: the plan is a property of the access
 arrays only (the paper's point) — the value rank is an execution detail.
@@ -32,7 +33,7 @@ from repro.core.plan import BlockPlan, CostModel
 from repro.core.seed import spmv_seed
 from repro.obs import trace as _trace
 
-_BACKENDS = ("jax", "segsum", "auto")
+_BACKENDS = ("jax", "segsum", "pallas", "auto")
 
 
 @dataclasses.dataclass
@@ -61,7 +62,14 @@ class SpMM:
                  tune: bool = False,
                  tune_cache_dir: str | None = None,
                  validate: str = "strict",
+                 allow_interpret: bool = False,
                  mesh=None, shards: int | None = None) -> "SpMM":
+        """``allow_interpret=True`` admits interpret-mode Pallas
+        candidates into the ``backend="auto"`` / ``tune=True`` space
+        off-accelerator (their timings are not wall-clock comparable, so
+        they are excluded by default; the tuning cache key folds the
+        platform, so an interpret winner can never replay as an
+        accelerator choice)."""
         with _trace.span("app.spmm.build", backend=backend,
                          nnz=int(np.asarray(vals).size)):
             return cls._from_coo(
@@ -70,18 +78,17 @@ class SpMM:
                 coalesce=coalesce, reduce=reduce,
                 plan_cache_dir=plan_cache_dir, tune=tune,
                 tune_cache_dir=tune_cache_dir, validate=validate,
-                mesh=mesh, shards=shards)
+                allow_interpret=allow_interpret, mesh=mesh, shards=shards)
 
     @classmethod
     def _from_coo(cls, rows, cols, vals, shape, *, lane_width, backend,
                   cost, fused, stage_b, coalesce, reduce, plan_cache_dir,
-                  tune, tune_cache_dir, validate, mesh, shards) -> "SpMM":
+                  tune, tune_cache_dir, validate, allow_interpret, mesh,
+                  shards) -> "SpMM":
         from repro.core import planio
         if backend not in _BACKENDS:
             raise ValueError(
-                f"SpMM supports backend in {_BACKENDS} (got {backend!r}); "
-                "the Pallas emitter carries scalar lanes only "
-                "(rank-polymorphism rules, DESIGN.md §8)")
+                f"SpMM supports backend in {_BACKENDS} (got {backend!r})")
         seed = spmv_seed(reduce=reduce)
         # repair combines duplicates with THIS product's semiring reduce —
         # min/max/mul dedup differently from add (DESIGN.md §9)
@@ -102,10 +109,10 @@ class SpMM:
                     from repro.launch.mesh import make_shard_mesh
                     make_shard_mesh(int(shards))   # validate, with recipe
                     shard_counts = tuple(sorted({1, int(shards)}))
-                space = [c for c in candidate_space(
-                            seed, lane_widths=(lane_width,),
-                            shard_counts=shard_counts)
-                         if c.backend != "pallas"]
+                space = candidate_space(
+                    seed, lane_widths=(lane_width,),
+                    shard_counts=shard_counts,
+                    allow_interpret=allow_interpret)
                 rng = np.random.default_rng(0)
                 b_ex = jnp.asarray(rng.standard_normal(
                     (shape[1], 8)).astype(np.float32))

@@ -10,6 +10,11 @@ TPU adaptation of the paper's instruction groups:
     derived on the fly from segment-id compares (cheaper than the paper's
     stored M mask vectors — a beyond-paper micro-optimization, VPU compares
     are free relative to the metadata loads they replace).
+
+Both blocks are rank-polymorphic over trailing lane axes (DESIGN.md §8,
+§13): windows/terms may carry ``(..., D)`` value rows (SpMM lanes), while
+slot/offset/segment metadata stays 2-D and broadcasts — the same
+``_expand_trailing`` rule the XLA emitter applies.
 """
 from __future__ import annotations
 
@@ -30,9 +35,30 @@ REDUCE_FNS = {
 FULL_REDUCE = -1
 
 
+def expand_trailing(a: jnp.ndarray, ndim: int) -> jnp.ndarray:
+    """Append trailing singleton axes until ``a.ndim == ndim`` — the §8
+    rank rule, usable inside kernel bodies (pure reshape)."""
+    if a.ndim >= ndim:
+        return a
+    return a.reshape(a.shape + (1,) * (ndim - a.ndim))
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Platform-resolve the interpret toggle: Pallas kernels compile for
+    real on TPU/GPU and fall back to interpret mode only where no Mosaic/
+    Triton lowering exists (CPU CI) or when explicitly requested.
+    Interpret mode is a correctness/debugging vehicle — it must be opt-in
+    on accelerators so an interpreted launch can never masquerade as the
+    production path."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
 def permute_onehot(windows: jnp.ndarray, slot: jnp.ndarray,
                    offset: jnp.ndarray) -> jnp.ndarray:
-    """Gather-replacement permute: windows (M, N) -> (N,) per-lane values.
+    """Gather-replacement permute: windows (M, N, ...) -> (N, ...) per-lane
+    values.
 
     ``slot``/``offset`` are (1, N) int32.  Implemented as
     ``one_hot(slot * N + offset) @ concat(windows)`` — an (N, M*N) x (M*N,)
@@ -47,33 +73,42 @@ def permute_onehot(windows: jnp.ndarray, slot: jnp.ndarray,
     returns the selected word bit for bit for every dtype, and the
     mask+sum still vectorizes on the VPU (one-hot generation is shared
     with the matmul form; only the combine differs).
+
+    Rank rule: trailing axes of ``windows`` ride along unchanged — every
+    lane selects a whole ``(...,)`` value row (SpMM fetches rows of B), so
+    the one-hot mask broadcasts over them.
     """
-    m, n = windows.shape
+    m, n = windows.shape[:2]
+    trailing = windows.shape[2:]
     sel = (slot.astype(jnp.int32) * n + offset.astype(jnp.int32)).reshape(n)
     cols = jax.lax.broadcasted_iota(jnp.int32, (n, m * n), 1)
-    onehot = cols == sel[:, None]
-    flat = windows.reshape(m * n)
-    return jnp.where(onehot, flat[None, :],
+    onehot = cols == sel[:, None]                         # (N, M*N)
+    flat = windows.reshape((m * n,) + trailing)
+    mask = expand_trailing(onehot, 2 + len(trailing))     # (N, M*N, 1...)
+    return jnp.where(mask, flat[None],
                      jnp.zeros((), flat.dtype)).sum(axis=1)
 
 
 def segmented_reduce_lanes(term: jnp.ndarray, seg: jnp.ndarray,
                            op_flag: int, reduce: str) -> jnp.ndarray:
-    """(1, N) lane vector -> (1, N) with each segment head holding the full
-    segment reduction.  ``op_flag`` is static (one kernel specialization per
-    pattern class — the paper's per-flag code generation).  Shift pads use
-    the dtype-aware identity (DESIGN.md §3a)."""
+    """(1, N, ...) lane vector -> (1, N, ...) with each segment head holding
+    the full segment reduction.  ``op_flag`` is static (one kernel
+    specialization per pattern class — the paper's per-flag code
+    generation).  ``seg`` is always (1, N) and broadcasts over trailing
+    lane axes.  Shift pads use the dtype-aware identity (DESIGN.md §3a)."""
     op, _, full = REDUCE_FNS[reduce]
     identity = reduce_identity_for(reduce, term.dtype)
     if op_flag == FULL_REDUCE:
-        total = full(term)
-        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape, 1)
-        return jnp.where(lane == 0, total, term)
+        total = full(term, axis=1, keepdims=True)
+        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape[:2], 1)
+        return jnp.where(expand_trailing(lane == 0, term.ndim), total, term)
+    trailing = ((0, 0),) * (term.ndim - 2)
     for k in range(op_flag):
         d = 1 << k
-        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+        shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)) + trailing,
                           constant_values=identity)
         seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
                             constant_values=SEG_PAD)
-        term = jnp.where(seg == seg_shift, op(term, shifted), term)
+        mask = expand_trailing(seg == seg_shift, term.ndim)
+        term = jnp.where(mask, op(term, shifted), term)
     return term

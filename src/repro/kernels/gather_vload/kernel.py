@@ -4,6 +4,11 @@ Replaces ``x[idx]`` (per-element gather) for one pattern class with
 ``ls_flag`` contiguous lane-tile loads + a one-hot MXU permute + selects.
 This is the building block the SpMV/MoE kernels reuse; standalone form for
 unit tests and for use as a drop-in embedding-lookup path.
+
+Rank-polymorphic over trailing lane axes (DESIGN.md §8/§13): ``x_view``
+may be ``(W, N, D, ...)`` — each lane then selects a whole value row
+(embedding-row lookup is exactly this shape).  ``interpret`` is
+platform-resolved (opt-in on accelerators).
 """
 from __future__ import annotations
 
@@ -26,30 +31,36 @@ def _body(win_ref, *refs, ls: int, stream: bool):
         return
     windows = jnp.concatenate([t[...] for t in win_tiles], axis=0)
     out = common.permute_onehot(windows, slot_ref[...], off_ref[...])
-    out_ref[...] = out.reshape(1, -1).astype(out_ref.dtype)
+    out_ref[...] = out.reshape((1,) + out.shape).astype(out_ref.dtype)
 
 
 def gather_vload(x_view: jnp.ndarray, win_ids: jnp.ndarray,
                  slot: jnp.ndarray, off: jnp.ndarray, *, ls: int,
-                 stream: bool = False, interpret: bool = True) -> jnp.ndarray:
-    """x_view (W, N) lane-tile view; win_ids (B, ls) int32; slot/off (B, N)
-    int32.  Returns (B, N) == concat(x_view[win_ids[b]])[slot*N+off] per b."""
+                 stream: bool = False,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """x_view (W, N, ...) lane-tile view; win_ids (B, ls) int32; slot/off
+    (B, N) int32.  Returns (B, N, ...) == concat(x_view[win_ids[b]])
+    [slot*N+off] per b, trailing axes riding along."""
     b, n = slot.shape
+    trailing = x_view.shape[2:]
+    z = len(trailing)
 
     def _win_index_map(k):
         def im(i, w):
-            return (w[i, k], 0)
+            return (w[i, k], 0) + (0,) * z
         return im
 
-    in_specs = [pl.BlockSpec((1, n), _win_index_map(k)) for k in range(ls)]
+    in_specs = [pl.BlockSpec((1, n) + trailing, _win_index_map(k))
+                for k in range(ls)]
     in_specs += [pl.BlockSpec((1, n), lambda i, w: (i, 0))] * 2
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(b,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, n), lambda i, w: (i, 0)))
+        out_specs=pl.BlockSpec((1, n) + trailing,
+                               lambda i, w: (i, 0) + (0,) * z))
     body = functools.partial(_body, ls=ls, stream=stream)
     return pl.pallas_call(
         body, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, n), x_view.dtype),
-        interpret=interpret,
+        out_shape=jax.ShapeDtypeStruct((b, n) + trailing, x_view.dtype),
+        interpret=common.resolve_interpret(interpret),
     )(win_ids, *([x_view] * ls), slot, off)

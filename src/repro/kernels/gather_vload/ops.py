@@ -10,6 +10,9 @@ from repro.kernels.gather_vload.kernel import gather_vload
 
 @functools.partial(jax.jit, static_argnames=("ls", "stream", "interpret"))
 def gather_vload_op(x_view, win_ids, slot, off, ls: int,
-                    stream: bool = False, interpret: bool = True):
+                    stream: bool = False, interpret: bool | None = None):
+    """``interpret=None`` platform-resolves (real compile on TPU/GPU,
+    interpret only on CPU or by explicit request) — interpret mode is
+    opt-in, never an accidental production path."""
     return gather_vload(x_view, win_ids, slot, off, ls=ls, stream=stream,
                         interpret=interpret)

@@ -17,13 +17,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import common
+
 
 def _body(rows_ref, src_ref, out_ref):
     out_ref[...] = src_ref[...]
 
 
 def row_gather(src: jnp.ndarray, row_ids: jnp.ndarray, d_tile: int = 512,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """out[i, :] = src[row_ids[i], :].
 
     src (T, D) — token activations (append a zero row for padding slots);
@@ -43,5 +45,5 @@ def row_gather(src: jnp.ndarray, row_ids: jnp.ndarray, d_tile: int = 512,
     return pl.pallas_call(
         _body, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r, d), src.dtype),
-        interpret=interpret,
+        interpret=common.resolve_interpret(interpret),
     )(row_ids, src)

@@ -9,5 +9,9 @@ from repro.kernels.moe_dispatch.kernel import row_gather
 
 
 @functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
-def row_gather_op(src, row_ids, d_tile: int = 512, interpret: bool = True):
+def row_gather_op(src, row_ids, d_tile: int = 512,
+                  interpret: bool | None = None):
+    """``interpret=None`` platform-resolves (real compile on TPU/GPU,
+    interpret only on CPU or by explicit request) — interpret mode is
+    opt-in, never an accidental production path."""
     return row_gather(src, row_ids, d_tile=d_tile, interpret=interpret)

@@ -2,9 +2,17 @@
 
 Reduces consecutive-run segments inside lane blocks with ``op_flag``
 log-step masked shift-combines.  Grid tiles the block dimension; each grid
-step owns a (rows_per_step, N) VMEM tile.  Unlike the per-class SpMV kernel
-this one packs 8 lane rows per step (sublane-aligned f32 tile), since no
-per-row window indirection is needed.
+step owns a (rows_per_step, N, ...) VMEM tile.  Unlike the per-class SpMV
+kernel this one packs 8 lane rows per step (sublane-aligned f32 tile),
+since no per-row window indirection is needed — ``rows_per_step`` is the
+tunable stage-A block-shape knob the autotuner sweeps
+(:class:`repro.tune.space.Candidate`).
+
+Rank-polymorphic over trailing lane axes (DESIGN.md §8/§13): ``x`` may be
+``(B, N, D, ...)``; ``seg_ids`` stays ``(B, N)`` and broadcasts.  The
+ladder runs in the input dtype with the dtype-aware identity (the old
+float32 cast silently corrupted int lanes).  ``interpret`` is
+platform-resolved (opt-in on accelerators).
 """
 from __future__ import annotations
 
@@ -14,34 +22,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.seed import reduce_identity_for
 from repro.kernels import common
 
 
 def _body(x_ref, seg_ref, o_ref, *, op_flag: int, reduce: str):
-    term = x_ref[...].astype(jnp.float32)
+    term = x_ref[...]
     seg = seg_ref[...]
-    op, identity, full = common.REDUCE_FNS[reduce]
+    op, _, full = common.REDUCE_FNS[reduce]
+    identity = reduce_identity_for(reduce, term.dtype)
     if op_flag == common.FULL_REDUCE:
         total = full(term, axis=1, keepdims=True)
-        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape, 1)
-        term = jnp.where(lane == 0, total, term)
+        lane = jax.lax.broadcasted_iota(jnp.int32, term.shape[:2], 1)
+        term = jnp.where(common.expand_trailing(lane == 0, term.ndim),
+                         total, term)
     else:
+        trailing = ((0, 0),) * (term.ndim - 2)
         for k in range(op_flag):
             d = 1 << k
-            shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)),
+            shifted = jnp.pad(term[:, d:], ((0, 0), (0, d)) + trailing,
                               constant_values=identity)
             seg_shift = jnp.pad(seg[:, d:], ((0, 0), (0, d)),
                                 constant_values=common.SEG_PAD)
-            term = jnp.where(seg == seg_shift, op(term, shifted), term)
+            mask = common.expand_trailing(seg == seg_shift, term.ndim)
+            term = jnp.where(mask, op(term, shifted), term)
     o_ref[...] = term.astype(o_ref.dtype)
 
 
 def segment_reduce(x: jnp.ndarray, seg_ids: jnp.ndarray, op_flag: int,
                    reduce: str = "add", rows_per_step: int = 8,
-                   interpret: bool = True) -> jnp.ndarray:
-    """x (B, N) values, seg_ids (B, N) int32 consecutive-run segment ids
-    (block-local).  Returns (B, N) with head lanes holding segment totals."""
-    b, n = x.shape
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """x (B, N, ...) values, seg_ids (B, N) int32 consecutive-run segment
+    ids (block-local).  Returns (B, N, ...) with head lanes holding
+    segment totals."""
+    b, n = x.shape[:2]
+    trailing = x.shape[2:]
+    z = len(trailing)
     r = min(rows_per_step, b)
     while b % r:
         r -= 1
@@ -50,9 +66,11 @@ def segment_reduce(x: jnp.ndarray, seg_ids: jnp.ndarray, op_flag: int,
     return pl.pallas_call(
         body,
         grid=grid,
-        in_specs=[pl.BlockSpec((r, n), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec((r, n) + trailing,
+                               lambda i: (i, 0) + (0,) * z),
                   pl.BlockSpec((r, n), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((r, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
-        interpret=interpret,
+        out_specs=pl.BlockSpec((r, n) + trailing,
+                               lambda i: (i, 0) + (0,) * z),
+        out_shape=jax.ShapeDtypeStruct((b, n) + trailing, x.dtype),
+        interpret=common.resolve_interpret(interpret),
     )(x, seg_ids)

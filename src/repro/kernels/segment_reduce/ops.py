@@ -11,6 +11,9 @@ from repro.kernels.segment_reduce.kernel import segment_reduce
 @functools.partial(jax.jit, static_argnames=("op_flag", "reduce",
                                              "rows_per_step", "interpret"))
 def segment_reduce_op(x, seg_ids, op_flag: int, reduce: str = "add",
-                      rows_per_step: int = 8, interpret: bool = True):
+                      rows_per_step: int = 8, interpret: bool | None = None):
+    """``interpret=None`` platform-resolves (real compile on TPU/GPU,
+    interpret only on CPU or by explicit request) — interpret mode is
+    opt-in, never an accidental production path."""
     return segment_reduce(x, seg_ids, op_flag, reduce, rows_per_step,
                           interpret)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for Intelligent-Unroll stage A.
+"""Pallas kernel ladder for Intelligent-Unroll stage A.
 
 One ``pallas_call`` per launch — a pattern class in per-class mode, or the
 whole vload section in fused mode (the grid spans every vload block).  Per
@@ -21,12 +21,34 @@ grid step the kernel
      native full reduction for single-segment blocks — bitwise-identical
      to the per-class launch of the same block (DESIGN.md §3).
 
-Outputs the (1, N) post-reduce lane vector; the merged write-back (Fig. 4)
-happens outside (stage B) on the compressed head stream.
+Outputs the (1, N, ...) post-reduce lane vector; the merged write-back
+(Fig. 4) happens outside (stage B) on the compressed head stream.
 
-VMEM budget per step: (ls * n_gathered + n_elementwise + 4) lane tiles of N
-floats/ints — a few KB at N=128; BlockSpecs keep everything lane-tile
-aligned (last dim N, MXU/VPU native).
+Rank polymorphism (DESIGN.md §13): gathered views may carry trailing lane
+axes — ``(W, N, D)`` for SpMM rows of B — which ride through the window
+DMAs, the one-hot permute and the shift ladder unchanged; lane metadata
+(slot/offset/segment) stays 2-D and broadcasts, the same
+``_expand_trailing`` rule the XLA emitter applies.
+
+Three lowering forms share the ladder body:
+
+  * ``class_stage_a`` — TPU window form (``PrefetchScalarGridSpec``, one
+    block per grid step; ``meta_prefetch`` widens the metadata DMA tiles).
+    This is also the portable ``interpret=True`` CI form.
+  * ``coalesced_stage_a`` — the dense-slice form for
+    ``ir.coalesce_gathers`` launches: per block ONE unaligned
+    ``pl.load``/``pl.ds`` slice of ``lane_width`` elements from the flat
+    padded view plus a static in-tile permute — no per-element gather at
+    all (the paper's gather→vector-load rewrite, §6).  ``rows_per_step``
+    blocks share one grid step.
+  * ``gpu_stage_a`` — Triton form: no scalar prefetch exists there, so
+    window tiles are fetched with in-kernel dynamic ``pl.ds`` loads from
+    the full view; ``rows_per_step`` rows per program.
+
+VMEM budget per step: (ls * n_gathered + n_elementwise + 4) lane tiles of
+N*prod(trailing) words — a few KB at N=128 scalar lanes; BlockSpecs keep
+everything lane-tile aligned (last dims N x trailing, MXU/VPU native).
+The coalesced form additionally keeps the flat gathered view resident.
 """
 from __future__ import annotations
 
@@ -41,9 +63,41 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import common
 
 
+def _largest_divisor(b: int, r: int) -> int:
+    """Largest step size <= r that divides b (>= 1) — kernel params are
+    upper bounds; the realized value keeps the grid exact so no block is
+    ever padded or dropped (bitwise-stable across any requested value)."""
+    r = max(1, min(int(r), max(b, 1)))
+    while b % r:
+        r -= 1
+    return r
+
+
+def _combine_lanes(win_vals: dict, elem_vals: dict, combine: Callable,
+                   seg: jnp.ndarray, op: int, mixed, reduce: str):
+    """Shared ladder tail: broadcast elementwise lanes up to the gathered
+    rank (§8), combine, shift-reduce, and resolve the fused-mixed
+    native-reduction select.  ``mixed`` is the per-block flag value (a
+    traced scalar) or None."""
+    vals = dict(win_vals)
+    rank = max((v.ndim for v in vals.values()), default=1)
+    for e, v in elem_vals.items():
+        vals[e] = common.expand_trailing(v, rank)
+    term = combine(vals)
+    term = term.reshape((1,) + term.shape)
+    red = common.segmented_reduce_lanes(term, seg, op, reduce)
+    if mixed is not None:
+        native = common.segmented_reduce_lanes(term, seg,
+                                               common.FULL_REDUCE, reduce)
+        red = jnp.where(mixed != 0, native, red)
+    return red
+
+
+# ------------------------------------------------------- TPU window form
 def _stage_a_body(win_ref, flag_ref, *refs, combine: Callable,
                   gathered: tuple, elementwise: tuple, ls: int, op: int,
-                  stream: bool, mixed: bool, reduce: str, out_dtype):
+                  stream: bool, mixed: bool, reduce: str, out_dtype,
+                  meta_prefetch: int):
     """Kernel body. ``refs`` layout:
     [g0_win0..g0_win{ls-1}, g1_win0.., ...] + [elem...] +
     [slot, offset, seg] + [out]."""
@@ -54,26 +108,27 @@ def _stage_a_body(win_ref, flag_ref, *refs, combine: Callable,
     slot_ref, off_ref, seg_ref = refs[n_g * ls + n_e: n_g * ls + n_e + 3]
     out_ref = refs[-1]
 
+    if meta_prefetch == 1:
+        slot, off, seg = slot_ref[...], off_ref[...], seg_ref[...]
+    else:
+        # metadata arrives in (meta_prefetch, N) tiles — fewer, larger
+        # DMAs; this step's row is selected dynamically inside VMEM
+        i = pl.program_id(0) % meta_prefetch
+        slot = slot_ref[pl.ds(i, 1)]
+        off = off_ref[pl.ds(i, 1)]
+        seg = seg_ref[pl.ds(i, 1)]
+
     vals = {}
     for gi, g in enumerate(gathered):
-        tiles = [win_refs[gi * ls + k][...] for k in range(ls)]  # ls x (1, N)
+        tiles = [win_refs[gi * ls + k][...] for k in range(ls)]
         if stream:
             vals[g] = tiles[0][0]
         else:
-            windows = jnp.concatenate(tiles, axis=0)             # (ls, N)
-            vals[g] = common.permute_onehot(windows, slot_ref[...],
-                                            off_ref[...])
-    for ei, e in enumerate(elementwise):
-        vals[e] = elem_refs[ei][...][0]
-
-    term = combine(vals).reshape(1, -1)
-    red = common.segmented_reduce_lanes(term, seg_ref[...], op, reduce)
-    if mixed:
-        # fused section with single-segment members: the scalar-prefetched
-        # per-block flag keeps the native reduction for exactly those blocks
-        native = common.segmented_reduce_lanes(term, seg_ref[...],
-                                               common.FULL_REDUCE, reduce)
-        red = jnp.where(flag_ref[pl.program_id(0)] != 0, native, red)
+            windows = jnp.concatenate(tiles, axis=0)   # (ls, N, ...)
+            vals[g] = common.permute_onehot(windows, slot, off)
+    elem_vals = {e: elem_refs[ei][...][0] for ei, e in enumerate(elementwise)}
+    flag = flag_ref[pl.program_id(0)] if mixed else None
+    red = _combine_lanes(vals, elem_vals, combine, seg, op, flag, reduce)
     out_ref[...] = red.astype(out_dtype)
 
 
@@ -83,54 +138,265 @@ def class_stage_a(win_ids: jnp.ndarray, gathered_views: dict,
                   gathered: tuple, elementwise: tuple, ls: int, op: int,
                   stream: bool, reduce: str,
                   full_flags: jnp.ndarray | None = None,
-                  out_dtype=jnp.float32,
-                  interpret: bool = True) -> jnp.ndarray:
+                  out_dtype=jnp.float32, out_trailing: tuple = (),
+                  interpret: bool | None = None,
+                  meta_prefetch: int = 1,
+                  platform: str | None = None) -> jnp.ndarray:
     """Launch stage A for one pattern class / fused section.
 
     win_ids        (Bc, ls) int32 — scalar-prefetched window indices
-    gathered_views g -> (W, N) lane-tile view of the dense array
+    gathered_views g -> (W, N, ...) lane-tile view of the dense array
     elem_blocks    e -> (Bc, N) exec-order immutable data
     slot/off/seg   (Bc, N) int32
     full_flags     (Bc,) int32 or None — per-block native-reduction flags
                    (fused mixed sections only), scalar-prefetched
-    returns        (Bc, N) post-reduce lane matrix
+    out_trailing   trailing lane axes of the combine result (§8)
+    meta_prefetch  metadata DMA tile height (upper bound; realized value
+                   is the largest divisor of Bc — a tuned kernel param)
+    platform       lowering form override; default ``jax.default_backend()``
+                   (gpu -> Triton form, otherwise TPU/interpret form)
+    returns        (Bc, N, ...) post-reduce lane matrix
     """
+    interpret = common.resolve_interpret(interpret)
+    platform = platform or jax.default_backend()
+    if platform == "gpu" and not interpret:
+        return gpu_stage_a(
+            win_ids, gathered_views, elem_blocks, slot, off, seg,
+            combine=combine, gathered=gathered, elementwise=elementwise,
+            ls=ls, op=op, stream=stream, reduce=reduce,
+            full_flags=full_flags, out_dtype=out_dtype,
+            out_trailing=out_trailing, interpret=interpret)
     bc, n = slot.shape
     mixed = full_flags is not None
     if full_flags is None:
         full_flags = jnp.zeros((bc,), jnp.int32)
+    p = _largest_divisor(bc, meta_prefetch)
     body = functools.partial(_stage_a_body, combine=combine,
                              gathered=gathered, elementwise=elementwise,
                              ls=ls, op=op, stream=stream, mixed=mixed,
-                             reduce=reduce, out_dtype=out_dtype)
-
-    def _win_index_map(k):
-        def im(b, w, f):
-            return (w[b, k], 0)
-        return im
+                             reduce=reduce, out_dtype=out_dtype,
+                             meta_prefetch=p)
 
     in_specs = []
     operands = []
     for g in gathered:
+        view = gathered_views[g]
+        tshape = view.shape[2:]
         for k in range(ls):
-            in_specs.append(pl.BlockSpec((1, n), _win_index_map(k)))
-            operands.append(gathered_views[g])
+            def im(b, w, f, k=k, z=len(tshape)):
+                return (w[b, k], 0) + (0,) * z
+            in_specs.append(pl.BlockSpec((1, n) + tshape, im))
+            operands.append(view)
     for e in elementwise:
         in_specs.append(pl.BlockSpec((1, n), lambda b, w, f: (b, 0)))
         operands.append(elem_blocks[e])
     for meta in (slot, off, seg):
-        in_specs.append(pl.BlockSpec((1, n), lambda b, w, f: (b, 0)))
+        in_specs.append(
+            pl.BlockSpec((p, n), lambda b, w, f, p=p: (b // p, 0)))
         operands.append(meta)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(bc,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, n), lambda b, w, f: (b, 0)),
+        out_specs=pl.BlockSpec(
+            (1, n) + out_trailing,
+            lambda b, w, f: (b, 0) + (0,) * len(out_trailing)),
     )
     fn = pl.pallas_call(
         body, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((bc, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((bc, n) + out_trailing, out_dtype),
         interpret=interpret,
     )
     return fn(win_ids, full_flags, *operands)
+
+
+# -------------------------------------------------- dense-slice (coalesced)
+def _coalesced_body(start_ref, flag_ref, *refs, combine: Callable,
+                    gathered: tuple, elementwise: tuple, op: int,
+                    mixed: bool, reduce: str, out_dtype, has_off: bool,
+                    rows: int, n: int):
+    """``refs`` layout: [flat_g...] + [elem...] + [off?, seg] + [out].
+    Per row: ONE unaligned dense ``pl.ds`` slice of N words from the flat
+    padded view (the paper's vector load), then a static in-tile permute
+    when the run is strided (``local_offset``), then the shared ladder."""
+    n_g = len(gathered)
+    n_e = len(elementwise)
+    flat_refs = refs[:n_g]
+    elem_refs = refs[n_g: n_g + n_e]
+    off_ref = refs[n_g + n_e] if has_off else None
+    seg_ref = refs[n_g + n_e + int(has_off)]
+    out_ref = refs[-1]
+    zero_slot = jnp.zeros((1, n), jnp.int32)
+    for i in range(rows):
+        b = pl.program_id(0) * rows + i
+        st = start_ref[b]
+        vals = {}
+        for gi, g in enumerate(gathered):
+            fr = flat_refs[gi]
+            tile = fr[(pl.ds(st, n),) + (slice(None),) * (fr.ndim - 1)]
+            if has_off:
+                # strided run: permute inside the loaded tile (one-hot
+                # select — static metadata, no memory gather)
+                vals[g] = common.permute_onehot(
+                    common.expand_trailing(tile, fr.ndim)
+                    .reshape((1, n) + fr.shape[1:]),
+                    zero_slot, off_ref[i:i + 1])
+            else:
+                vals[g] = tile                  # identity run: slice IS it
+        elem_vals = {e: elem_refs[ei][i] for ei, e in enumerate(elementwise)}
+        seg = seg_ref[i:i + 1]
+        flag = flag_ref[b] if mixed else None
+        red = _combine_lanes(vals, elem_vals, combine, seg, op, flag,
+                             reduce)
+        out_ref[i:i + 1] = red.astype(out_dtype)
+
+
+def coalesced_stage_a(starts: jnp.ndarray, flat_views: dict,
+                      elem_blocks: dict, local_off: jnp.ndarray | None,
+                      seg: jnp.ndarray, *, combine: Callable,
+                      gathered: tuple, elementwise: tuple, op: int,
+                      reduce: str, full_flags: jnp.ndarray | None = None,
+                      out_dtype=jnp.float32, out_trailing: tuple = (),
+                      interpret: bool | None = None,
+                      rows_per_step: int = 1) -> jnp.ndarray:
+    """Stage A for one COALESCED launch (``ir.coalesce_gathers``).
+
+    starts      (Bc,) int32 clamped slice bases, scalar-prefetched
+    flat_views  g -> (total, ...) flat padded view (``eng._pad_flat``)
+    local_off   (Bc, N) int32 in-tile permute, or None for identity runs
+    rows_per_step  blocks per grid step (upper bound; realized value is
+                   the largest divisor of Bc — a tuned kernel param)
+
+    The legality/bitwise argument is the coalesce pass's own (DESIGN.md
+    §8/§13): the slice covers ``[base, base + N)`` of the same padded view
+    the window path reads, and every lane selects the identical word the
+    gather fetched.
+    """
+    interpret = common.resolve_interpret(interpret)
+    bc, n = seg.shape
+    mixed = full_flags is not None
+    if full_flags is None:
+        full_flags = jnp.zeros((bc,), jnp.int32)
+    r = _largest_divisor(bc, rows_per_step)
+    has_off = local_off is not None
+    body = functools.partial(_coalesced_body, combine=combine,
+                             gathered=gathered, elementwise=elementwise,
+                             op=op, mixed=mixed, reduce=reduce,
+                             out_dtype=out_dtype, has_off=has_off,
+                             rows=r, n=n)
+    in_specs = []
+    operands = []
+    for g in gathered:
+        view = flat_views[g]
+        # whole flat view resident (VMEM ceiling documented in §13); the
+        # per-row loads are unaligned N-wide pl.ds slices of it
+        in_specs.append(pl.BlockSpec(
+            view.shape, lambda b, s, f, z=view.ndim: (0,) * z))
+        operands.append(view)
+    for e in elementwise:
+        in_specs.append(
+            pl.BlockSpec((r, n), lambda b, s, f: (b, 0)))
+        operands.append(elem_blocks[e])
+    if has_off:
+        in_specs.append(pl.BlockSpec((r, n), lambda b, s, f: (b, 0)))
+        operands.append(jnp.asarray(local_off, jnp.int32))
+    in_specs.append(pl.BlockSpec((r, n), lambda b, s, f: (b, 0)))
+    operands.append(seg)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bc // r,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (r, n) + out_trailing,
+            lambda b, s, f: (b, 0) + (0,) * len(out_trailing)),
+    )
+    fn = pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bc, n) + out_trailing, out_dtype),
+        interpret=interpret,
+    )
+    return fn(jnp.asarray(starts, jnp.int32), full_flags, *operands)
+
+
+# --------------------------------------------------------- GPU (Triton)
+def _gpu_body(*refs, combine: Callable, gathered: tuple,
+              elementwise: tuple, ls: int, op: int, stream: bool,
+              mixed: bool, reduce: str, out_dtype, rows: int):
+    """``refs`` layout: [win, flag] + [view_g...] + [elem...] +
+    [slot, off, seg] + [out].  No scalar prefetch on Triton: window tiles
+    are fetched with dynamic ``pl.ds`` row loads from the full view."""
+    win_ref, flag_ref = refs[0], refs[1]
+    n_g = len(gathered)
+    n_e = len(elementwise)
+    view_refs = refs[2: 2 + n_g]
+    elem_refs = refs[2 + n_g: 2 + n_g + n_e]
+    slot_ref, off_ref, seg_ref = refs[2 + n_g + n_e: 2 + n_g + n_e + 3]
+    out_ref = refs[-1]
+    for i in range(rows):
+        vals = {}
+        for gi, g in enumerate(gathered):
+            view = view_refs[gi]
+            rest = (slice(None),) * (view.ndim - 1)
+            tiles = [view[(pl.ds(win_ref[i, k], 1),) + rest]
+                     for k in range(ls)]
+            if stream:
+                vals[g] = tiles[0][0]
+            else:
+                windows = jnp.concatenate(tiles, axis=0)
+                vals[g] = common.permute_onehot(
+                    windows, slot_ref[i:i + 1], off_ref[i:i + 1])
+        elem_vals = {e: elem_refs[ei][i] for ei, e in enumerate(elementwise)}
+        flag = flag_ref[i] if mixed else None
+        red = _combine_lanes(vals, elem_vals, combine, seg_ref[i:i + 1],
+                             op, flag, reduce)
+        out_ref[i:i + 1] = red.astype(out_dtype)
+
+
+def gpu_stage_a(win_ids: jnp.ndarray, gathered_views: dict,
+                elem_blocks: dict, slot: jnp.ndarray, off: jnp.ndarray,
+                seg: jnp.ndarray, *, combine: Callable, gathered: tuple,
+                elementwise: tuple, ls: int, op: int, stream: bool,
+                reduce: str, full_flags: jnp.ndarray | None = None,
+                out_dtype=jnp.float32, out_trailing: tuple = (),
+                interpret: bool | None = None,
+                rows_per_step: int = 1) -> jnp.ndarray:
+    """Triton lowering of :func:`class_stage_a` (same contract).  Used
+    when ``jax.default_backend() == "gpu"``; also runs under
+    ``interpret=True`` so CPU CI covers the form."""
+    interpret = common.resolve_interpret(interpret)
+    bc, n = slot.shape
+    mixed = full_flags is not None
+    if full_flags is None:
+        full_flags = jnp.zeros((bc,), jnp.int32)
+    r = _largest_divisor(bc, rows_per_step)
+    body = functools.partial(_gpu_body, combine=combine, gathered=gathered,
+                             elementwise=elementwise, ls=ls, op=op,
+                             stream=stream, mixed=mixed, reduce=reduce,
+                             out_dtype=out_dtype, rows=r)
+    in_specs = [pl.BlockSpec((r, ls), lambda b: (b, 0)),
+                pl.BlockSpec((r,), lambda b: (b,))]
+    operands = [jnp.asarray(win_ids, jnp.int32), full_flags]
+    for g in gathered:
+        view = gathered_views[g]
+        in_specs.append(pl.BlockSpec(
+            view.shape, lambda b, z=view.ndim: (0,) * z))
+        operands.append(view)
+    for e in elementwise:
+        in_specs.append(pl.BlockSpec((r, n), lambda b: (b, 0)))
+        operands.append(elem_blocks[e])
+    for meta in (slot, off, seg):
+        in_specs.append(pl.BlockSpec((r, n), lambda b: (b, 0)))
+        operands.append(meta)
+    fn = pl.pallas_call(
+        body,
+        grid=(bc // r,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (r, n) + out_trailing,
+            lambda b: (b, 0) + (0,) * len(out_trailing)),
+        out_shape=jax.ShapeDtypeStruct((bc, n) + out_trailing, out_dtype),
+        interpret=interpret,
+    )
+    return fn(*operands)

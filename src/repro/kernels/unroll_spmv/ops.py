@@ -1,8 +1,8 @@
 """Jitted wrapper assembling Pallas launches into stage A.
 
 ``make_stage_a(plan, ..., launches=...)`` returns a function
-``fn(mutable) -> (B, N)`` lanes matrix in exec-block order.  The launch
-list comes from the lowered information-code tree
+``fn(mutable) -> (B, N, ...)`` lanes matrix in exec-block order.  The
+launch list comes from the lowered information-code tree
 (:mod:`repro.core.ir`): the fused form is at most ONE ``pallas_call``
 covering every vload block (the grid spans the whole vload section,
 window BlockSpecs are padded to the section-wide max ``ls`` —
@@ -14,6 +14,18 @@ gather-fallback blocks, with per-block native-reduce flags carried on
 ``Launch.full_mask``.  The un-fused form is the paper's
 one-``pallas_call``-per-pattern-class list (§6.3 applies the rewrite
 only when the flags indicate a benefit).
+
+COALESCED launches (``ir.coalesce_gathers``, DESIGN.md §8) lower to the
+dense-slice kernel: one unaligned ``pl.ds`` vector load per block plus a
+static in-tile permute — no per-element gather.  Trailing lane axes (§8
+rank rules) flow through every form, so SpMM and the graph apps run on
+this emitter unchanged.
+
+``interpret`` is platform-resolved (``None`` -> real compile on TPU/GPU,
+interpret mode only on CPU or when explicitly requested).
+``kernel_params`` carries the tuned per-launch kernel knobs
+(:class:`repro.tune.space.Candidate`): ``rows_per_step`` for the
+dense-slice/Triton forms, ``meta_prefetch`` for the TPU window form.
 """
 from __future__ import annotations
 
@@ -23,23 +35,35 @@ import jax.numpy as jnp
 from repro.core import engine as eng
 from repro.core import ir
 from repro.core.plan import BlockPlan
-from repro.kernels.unroll_spmv.kernel import class_stage_a
+from repro.kernels import common
+from repro.kernels.unroll_spmv.kernel import class_stage_a, coalesced_stage_a
 
 
-def _term_dtype(seed, mutable, elem_exec):
-    """The dtype of the seed's combine expression for these inputs — the
-    kernel's lane/output dtype (int32 for the graph semirings; the old
-    hard-coded float32 silently corrupted large int values)."""
-    specs = {g: jax.ShapeDtypeStruct((1,), jnp.asarray(mutable[g]).dtype)
-             for g in seed.gathered}
+def _term_struct(seed, mutable, elem_exec):
+    """Shape/dtype of the seed's combine expression for these inputs — the
+    kernel's lane/output structure: dtype (int32 for the graph semirings;
+    the old hard-coded float32 silently corrupted large int values) AND
+    trailing lane axes (SpMM's ``(N, D)`` lanes, DESIGN.md §8)."""
+    specs = {}
+    for g in seed.gathered:
+        a = jnp.asarray(mutable[g])
+        specs[g] = jax.ShapeDtypeStruct((1,) + a.shape[1:], a.dtype)
+    rank = max((s.ndim for s in specs.values()), default=1)
     for e in seed.elementwise:
-        specs[e] = jax.ShapeDtypeStruct((1,), elem_exec[e].dtype)
-    return jax.eval_shape(seed.combine, specs).dtype
+        specs[e] = jax.ShapeDtypeStruct((1,) * rank, elem_exec[e].dtype)
+    out = jax.eval_shape(seed.combine, specs)
+    return out.dtype, out.shape[1:]
 
 
-def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
-                 launches: list[ir.Launch] | None = None):
+def make_stage_a(plan: BlockPlan, meta, elem_exec,
+                 interpret: bool | None = None,
+                 launches: list[ir.Launch] | None = None,
+                 kernel_params: dict | None = None):
     seed = plan.seed
+    interpret = common.resolve_interpret(interpret)
+    kp = kernel_params or {}
+    rows_per_step = int(kp.get("rows_per_step") or 1)
+    meta_prefetch = int(kp.get("meta_prefetch") or 1)
     if launches is None:
         launches = ir.lower(plan, backend="pallas").launches
     # per-launch static metadata, upcast to kernel-friendly int32 once
@@ -54,13 +78,18 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
             off=jnp.asarray(plan.lane_offset[s], jnp.int32),
             seg=jnp.asarray(plan.seg_ids[s], jnp.int32),
             gidx=jnp.asarray(plan.gather_idx[s], jnp.int32),
+            starts=(None if launch.slice_starts is None
+                    else jnp.asarray(launch.slice_starts, jnp.int32)),
+            local=(None if launch.local_offset is None
+                   else jnp.asarray(launch.local_offset, jnp.int32)),
             full=None if mask is None else jnp.asarray(mask, jnp.int32),
         ))
 
     def stage_a(mutable):
         views = {g: eng._pad_gathered(plan, jnp.asarray(mutable[g]))
                  for g in seed.gathered}
-        out_dtype = _term_dtype(seed, mutable, elem_exec)
+        out_dtype, out_trailing = _term_struct(seed, mutable, elem_exec)
+        flat_views = None
         parts = []
         for launch, cm in zip(launches, launch_meta):
             s = slice(launch.start, launch.stop)
@@ -69,15 +98,32 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
                 # native gather path (XLA) + in-XLA segmented reduce
                 vals = {g: jnp.asarray(mutable[g])[cm["gidx"]]
                         for g in seed.gathered}
-                vals.update(elem_blocks)
+                rank = max((v.ndim for v in vals.values()), default=2)
+                for e in seed.elementwise:
+                    vals[e] = eng._expand_trailing(elem_blocks[e], rank)
                 term = seed.combine(vals)
                 red = eng.segmented_reduce(term, cm["seg"], launch.op_flag,
                                            seed.reduce)
                 if cm["full"] is not None:
                     native = eng.segmented_reduce(
                         term, cm["seg"], eng.ft.FULL_REDUCE, seed.reduce)
-                    red = jnp.where((cm["full"] != 0)[:, None], native, red)
+                    red = jnp.where(
+                        eng._expand_trailing((cm["full"] != 0)[:, None],
+                                             term.ndim), native, red)
                 parts.append(red)
+                continue
+            if launch.gather == ir.COALESCED:
+                if flat_views is None:
+                    flat_views = {
+                        g: eng._pad_flat(plan, jnp.asarray(mutable[g]))
+                        for g in seed.gathered}
+                parts.append(coalesced_stage_a(
+                    cm["starts"], flat_views, elem_blocks, cm["local"],
+                    cm["seg"], combine=seed.combine, gathered=seed.gathered,
+                    elementwise=seed.elementwise, op=launch.op_flag,
+                    reduce=seed.reduce, full_flags=cm["full"],
+                    out_dtype=out_dtype, out_trailing=out_trailing,
+                    interpret=interpret, rows_per_step=rows_per_step))
                 continue
             parts.append(class_stage_a(
                 cm["win"], views, elem_blocks, cm["slot"], cm["off"],
@@ -85,7 +131,10 @@ def make_stage_a(plan: BlockPlan, meta, elem_exec, interpret: bool = True,
                 elementwise=seed.elementwise, ls=max(launch.ls_flag, 1),
                 op=launch.op_flag, stream=launch.stream, reduce=seed.reduce,
                 full_flags=cm["full"], out_dtype=out_dtype,
-                interpret=interpret))
+                out_trailing=out_trailing, interpret=interpret,
+                meta_prefetch=meta_prefetch))
+        if not parts:      # empty plan (nnz == 0): no launches, no lanes
+            return jnp.zeros((0, plan.lane_width) + out_trailing, out_dtype)
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
     return stage_a

@@ -43,8 +43,15 @@ def _launch_heads(plan, launch) -> int:
     return int(hi - lo)
 
 
-def _launch_cost(plan, launch, num_elementwise: int) -> dict:
-    """Analytic FLOPs/bytes for one Launch leaf (see module docstring)."""
+def _launch_cost(plan, launch, num_elementwise: int,
+                 backend: str = "jax") -> dict:
+    """Analytic FLOPs/bytes for one Launch leaf (see module docstring).
+
+    ``backend`` disambiguates the coalesced idiom: the XLA lowering pays
+    an 8-byte dynamic-slice base per block, while the Pallas dense-slice
+    kernel (DESIGN.md §13) rides the block bases in as int32 scalar
+    prefetch and issues one unaligned N-wide ``pl.ds`` load per block
+    row out of the resident flat view."""
     from repro.core import feature_table as ft
 
     n = plan.lane_width
@@ -62,7 +69,12 @@ def _launch_cost(plan, launch, num_elementwise: int) -> dict:
     elif launch.gather == "stream":
         gather_bytes = blocks * n * _ELEM_BYTES
     elif launch.gather == "coalesced":
-        gather_bytes = blocks * (n * _ELEM_BYTES + 8)   # slice + base
+        if backend == "pallas":
+            # dense-slice kernel: scalar-prefetched int32 base + one
+            # N-wide in-kernel dynamic slice per block row
+            gather_bytes = blocks * (n * _ELEM_BYTES + _IDX_BYTES)
+        else:
+            gather_bytes = blocks * (n * _ELEM_BYTES + 8)  # slice + base
         if launch.local_offset is not None:
             gather_bytes += lanes * _IDX_BYTES          # static permute
     else:  # pragma: no cover - future idioms
@@ -106,7 +118,7 @@ def launch_cost_table(tree) -> list[dict]:
     """Per-launch cost rows for one lowered CodeTree, exec order."""
     plan = tree.plan
     num_elem = len(getattr(plan.seed, "elementwise", ()))
-    return [_launch_cost(plan, launch, num_elem)
+    return [_launch_cost(plan, launch, num_elem, backend=tree.backend)
             for launch in tree.launches]
 
 

@@ -41,6 +41,8 @@ SEGSUM_NS = 5.0           # single sorted segment reduce, per lane
 PALLAS_TPU_SCALE = 0.35   # VMEM/MXU path vs XLA-CPU per-lane work
 INTERPRET_SCALE = 200.0   # pallas interpret mode: debugging, never fast
 SHARD_COLLECTIVE_US = 25.0  # per-participant all-gather/psum exchange
+STEP_NS = 3.0             # pallas per-grid-step dispatch, per block row
+META_NS = 1.0             # pallas per-block metadata DMA issue
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,9 +108,10 @@ def _stage_a_ns_per_lane(c: Candidate, f: PlanFeatures) -> float:
                   + f.stream_frac * STREAM_NS
                   + max(1.0 - f.fallback_frac - f.stream_frac, 0.0)
                   * (WINDOW_NS * max(f.mean_windows, 1.0)))
-    if c.coalesce and c.backend == "jax":
+    if c.coalesce and c.backend in ("jax", "pallas"):
         # the coalesced share of lanes trades its gather for a dense
-        # slice load (the pass is a no-op on the rest)
+        # slice load (the pass is a no-op on the rest); both
+        # lane-granular emitters lower the rewritten launches now
         gather = ((1.0 - f.coalesced_frac) * gather
                   + f.coalesced_frac * SLICE_NS)
     # exact per-group ladder depth in every mode (exec order groups by op);
@@ -144,6 +147,13 @@ def predict_us(c: Candidate, f: PlanFeatures, platform: str = "cpu"
           + f.lanes_total * _stage_a_ns_per_lane(c, f) * 1e-3
           + _stage_b_us(c, f))
     if c.backend == "pallas":
+        # per-launch kernel params (DESIGN.md §13): packing more block
+        # rows per grid step amortizes step dispatch, deeper metadata
+        # prefetch tiles amortize the per-block DMA issue.  Modeled on
+        # the requested upper bound — the realized divisor only helps.
+        rows = c.kernel_rows or 1
+        prefetch = c.kernel_prefetch or 1
+        us += f.num_blocks * (STEP_NS / rows + META_NS / prefetch) * 1e-3
         us *= PALLAS_TPU_SCALE if platform == "tpu" else INTERPRET_SCALE
     return _shard_scale(c, us)
 

@@ -114,7 +114,8 @@ def _default_exec_factory(plan, cand: Candidate, static_data, elem_exec):
                                          make_shard_mesh(cand.shards))
     return eng.make_executor(plan, static_data, backend=cand.backend,
                              fused=cand.fused, stage_b=cand.stage_b,
-                             elem_exec=elem_exec, coalesce=cand.coalesce)
+                             elem_exec=elem_exec, coalesce=cand.coalesce,
+                             kernel_params=cand.kernel_params)
 
 
 def _outputs_match(got, want) -> bool:

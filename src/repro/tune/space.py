@@ -11,13 +11,24 @@ configuration — and applies the *validity rules* that keep the tuner from
 ever measuring a configuration that cannot run (or cannot run honestly)
 on the current platform/seed:
 
-* ``pallas`` is skipped off-TPU unless interpret-mode candidates are
-  explicitly requested (interpret timings are not wall-clock comparable);
+* ``pallas`` is skipped off-accelerator unless interpret-mode candidates
+  are explicitly requested (interpret timings are not wall-clock
+  comparable);
 * ``segsum`` requires the reduce to have a ``jax.ops.segment_*`` form;
 * ``segsum`` ignores ``fused``/``stage_b`` (stage A+B collapse into one
   segment reduce), so those axes are canonicalized away to keep the
   space free of duplicate configurations;
-* ``stage_b="dense"`` only exists for the jax/pallas backends.
+* ``stage_b="dense"`` only exists for the jax/pallas backends;
+* the per-launch kernel-param axes (``kernel_rows`` — stage-A grid rows
+  per step, ``kernel_prefetch`` — metadata DMA tile depth) exist only
+  for ``pallas`` candidates, and ``kernel_prefetch`` only where the
+  lowering has scalar prefetch (TPU / interpret; the Triton form reads
+  metadata through full-view refs, so the knob would be a silent no-op
+  on GPU and is rejected rather than measured twice).
+
+``coalesce`` is a real axis for both lane-granular emitters now that the
+Pallas lowering consumes ``coalesce_gathers``-rewritten launches
+(dense-slice loads, DESIGN.md §13); only segsum canonicalizes it away.
 """
 from __future__ import annotations
 
@@ -47,6 +58,12 @@ class Candidate:
     max_windows_replace: int | None = None
     coalesce: bool = False             # ir.coalesce_gathers lowering pass
     shards: int = 1                    # row shards over a device mesh (§10)
+    # per-launch Pallas kernel params (None = emitter default of 1).
+    # Upper bounds, not exact values: the kernels realize the largest
+    # divisor of the block count, so results are bitwise-stable across
+    # every setting and the axes are pure performance knobs.
+    kernel_rows: int | None = None     # stage-A grid rows per step
+    kernel_prefetch: int | None = None  # metadata DMA tile depth (TPU)
 
     @property
     def plan_key(self) -> tuple:
@@ -67,8 +84,22 @@ class Candidate:
                else f"/w{self.max_windows_replace}")
         co = "/co" if self.coalesce else ""
         sh = f"/s{self.shards}" if self.shards > 1 else ""
+        kr = "" if self.kernel_rows is None else f"/kr{self.kernel_rows}"
+        kp = ("" if self.kernel_prefetch is None
+              else f"/kp{self.kernel_prefetch}")
         return (f"{self.backend}/{mode}/{self.stage_b}"
-                f"/n{self.lane_width}{cut}{co}{sh}")
+                f"/n{self.lane_width}{cut}{co}{sh}{kr}{kp}")
+
+    @property
+    def kernel_params(self) -> dict | None:
+        """The ``kernel_params`` mapping :func:`engine.make_executor`
+        consumes, or None when every knob is at its emitter default."""
+        kp: dict = {}
+        if self.kernel_rows is not None:
+            kp["rows_per_step"] = self.kernel_rows
+        if self.kernel_prefetch is not None:
+            kp["meta_prefetch"] = self.kernel_prefetch
+        return kp or None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -87,14 +118,18 @@ def default_platform() -> str:
 def canonicalize(c: Candidate) -> Candidate:
     """Collapse don't-care axes so the space holds no duplicate configs:
     the segsum backend has a single form (stage A+B are one segment
-    reduce), so ``fused``/``stage_b`` are fixed to their defaults; the
-    ``coalesce_gathers`` pass only lowers for the XLA emitter (segsum
-    folds stage A, Pallas keeps its window DMA path — DESIGN.md §8), so
-    ``coalesce`` is fixed off everywhere else."""
+    reduce), so ``fused``/``stage_b`` are fixed to their defaults; both
+    lane-granular emitters consume ``coalesce_gathers``-rewritten
+    launches now (DESIGN.md §13), so ``coalesce`` only canonicalizes
+    away for segsum; the kernel-param axes steer the Pallas emitters
+    alone, so they are fixed to None everywhere else."""
     if c.backend == "segsum":
         c = dataclasses.replace(c, fused=True, stage_b="gather")
-    if c.backend != "jax" and c.coalesce:
+    if c.backend not in ("jax", "pallas") and c.coalesce:
         c = dataclasses.replace(c, coalesce=False)
+    if c.backend != "pallas" and (c.kernel_rows is not None
+                                  or c.kernel_prefetch is not None):
+        c = dataclasses.replace(c, kernel_rows=None, kernel_prefetch=None)
     return c
 
 
@@ -108,7 +143,8 @@ def is_valid(c: Candidate, seed: CodeSeed, platform: str,
         return False
     if c.lane_width < 2:
         return False
-    if c.backend == "pallas" and platform != "tpu" and not allow_interpret:
+    if (c.backend == "pallas" and platform not in ("tpu", "gpu")
+            and not allow_interpret):
         return False
     if c.backend == "segsum" and seed.reduce not in SEGMENT_REDUCES:
         return False
@@ -120,7 +156,22 @@ def is_valid(c: Candidate, seed: CodeSeed, platform: str,
         return False
     if devices is not None and c.shards > devices:
         return False
+    for knob in (c.kernel_rows, c.kernel_prefetch):
+        if knob is not None and not (1 <= knob <= 64):
+            return False
+    if c.kernel_prefetch is not None and platform == "gpu":
+        # the Triton form has no scalar prefetch — metadata rides in
+        # full-view refs, so the knob would time the same kernel twice
+        return False
     return True
+
+
+# default per-launch kernel-param axes swept for pallas candidates on
+# accelerator platforms (None = emitter default).  Kept to one non-default
+# point per knob so the accelerator space stays measurable; widen via the
+# ``kernel_rows_axis`` / ``kernel_prefetch_axis`` arguments.
+_KERNEL_ROWS_AXIS = (None, 8)
+_KERNEL_PREFETCH_AXIS = (None, 4)
 
 
 def candidate_space(seed: CodeSeed, *, platform: str | None = None,
@@ -128,15 +179,21 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
                     lane_widths: tuple = (128,),
                     window_cutoffs: tuple = (None,),
                     shard_counts: tuple = (1,),
-                    allow_interpret: bool = False) -> list["Candidate"]:
+                    allow_interpret: bool = False,
+                    kernel_rows_axis: tuple = _KERNEL_ROWS_AXIS,
+                    kernel_prefetch_axis: tuple = _KERNEL_PREFETCH_AXIS,
+                    ) -> list["Candidate"]:
     """Enumerate the valid, canonical candidate list for ``seed`` on
     ``platform`` — the declarative product space filtered by
     :func:`is_valid` and deduplicated through :func:`canonicalize`.
 
     The default axes give 9 candidates on CPU (8 jax forms: fused x
-    stage_b x coalesce, + segsum) and add the two Pallas forms on TPU;
-    widening ``lane_widths`` / ``window_cutoffs`` multiplies the *plan*
-    axis, which the search harness shares per :attr:`Candidate.plan_key`.
+    stage_b x coalesce, + segsum); accelerator platforms add the Pallas
+    forms (fused x stage_b x coalesce, crossed with the kernel-param
+    axes — rows-per-step everywhere, metadata prefetch where the
+    lowering has scalar prefetch).  Widening ``lane_widths`` /
+    ``window_cutoffs`` multiplies the *plan* axis, which the search
+    harness shares per :attr:`Candidate.plan_key`.
     """
     platform = platform or default_platform()
     devices = None
@@ -149,21 +206,31 @@ def candidate_space(seed: CodeSeed, *, platform: str | None = None,
         for cut in window_cutoffs:
             for k in shard_counts:
                 for backend in backends:
+                    kr_axis = (kernel_rows_axis if backend == "pallas"
+                               else (None,))
+                    kp_axis = (kernel_prefetch_axis if backend == "pallas"
+                               else (None,))
                     for fused in (True, False):
                         for stage_b in _STAGE_BS:
                             for coalesce in (False, True):
-                                c = Candidate(backend=backend, fused=fused,
-                                              stage_b=stage_b, lane_width=n,
-                                              max_windows_replace=cut,
-                                              coalesce=coalesce, shards=k)
-                                if not is_valid(c, seed, platform,
-                                                allow_interpret, devices):
-                                    continue
-                                c = canonicalize(c)
-                                if c in seen:
-                                    continue
-                                seen.add(c)
-                                out.append(c)
+                                for kr in kr_axis:
+                                    for kp in kp_axis:
+                                        c = Candidate(
+                                            backend=backend, fused=fused,
+                                            stage_b=stage_b, lane_width=n,
+                                            max_windows_replace=cut,
+                                            coalesce=coalesce, shards=k,
+                                            kernel_rows=kr,
+                                            kernel_prefetch=kp)
+                                        if not is_valid(c, seed, platform,
+                                                        allow_interpret,
+                                                        devices):
+                                            continue
+                                        c = canonicalize(c)
+                                        if c in seen:
+                                            continue
+                                        seen.add(c)
+                                        out.append(c)
     return out
 
 

@@ -71,8 +71,12 @@ def test_spmm_plan_cache_dir_and_backend_validation(tmp_path):
         (m.shape[1], 4)).astype(np.float32))
     np.testing.assert_array_equal(np.asarray(sp1.matmat(bmat)),
                                   np.asarray(sp2.matmat(bmat)))
-    with pytest.raises(ValueError, match="backend"):
-        SpMM.from_coo(*args, backend="pallas")   # scalar-lane emitter only
+    # pallas is a supported backend now (rank-polymorphic kernel ladder,
+    # DESIGN.md §13) — only a genuinely unknown name raises
+    sp3 = SpMM.from_coo(*args, lane_width=32, backend="pallas")
+    np.testing.assert_allclose(np.asarray(sp3.matmat(bmat)),
+                               np.asarray(sp1.matmat(bmat)),
+                               rtol=1e-5, atol=1e-6)
     with pytest.raises(ValueError, match="backend"):
         SpMM.from_coo(*args, backend="bogus")
 
